@@ -1,0 +1,36 @@
+"""Paper Fig. 6/7: accelerator co-location + query fusion vs
+DeepRecSys/Baymax, with the latency/utilization breakdown."""
+from __future__ import annotations
+
+from benchmarks.common import emit, query_sizes, timer
+from repro.configs.paper_models import paper_profile
+from repro.core.baselines import baymax_qps, deeprecsys_qps
+from repro.core.devices import SERVER_TYPES
+from repro.core.gradient_search import gradient_search
+from repro.serving.simulator import max_sustainable_qps, simulate
+
+
+def run():
+    sizes = query_sizes()
+    dev = SERVER_TYPES["T7"]
+    for model in ("dlrm-rmc3", "mt-wnd", "din"):
+        prof = paper_profile(model)
+        with timer() as t:
+            q_drs, s_drs, pl_drs = deeprecsys_qps(prof, dev, sizes)
+            q_bay, s_bay, pl_bay = baymax_qps(prof, dev, sizes)
+            res = gradient_search(prof, dev, sizes)
+        emit(f"fig6_{model}_T7", t.us,
+             f"deeprecsys={q_drs:.0f};baymax={q_bay:.0f};"
+             f"hercules={res.qps:.0f};"
+             f"colo_gain={q_bay/max(q_drs,1):.2f}x;"
+             f"fusion_gain={res.qps/max(q_bay,1):.2f}x")
+        # Fig 7: breakdown at 70% of hercules load on the baseline config
+        if s_drs is not None:
+            r = simulate(pl_drs, dev, s_drs, max(q_drs, 1.0) * 0.7, sizes)
+            emit(f"fig7_breakdown_{model}", 0.0,
+                 f"link_util={r.utils['link']:.2f};"
+                 f"engine_util={r.utils['engine']:.2f};p95={r.p95_ms:.1f}ms")
+
+
+if __name__ == "__main__":
+    run()

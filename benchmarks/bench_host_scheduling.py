@@ -1,0 +1,40 @@
+"""Paper Fig. 4/5: host-side (m x o) trade-off + op-parallelism idle cycles."""
+from __future__ import annotations
+
+from benchmarks.common import emit, query_sizes, timer
+from repro.configs.paper_models import paper_profile
+from repro.core.devices import SERVER_TYPES
+from repro.core.partition import enumerate_placements
+from repro.core.perfmodel import cpu_stage_time
+from repro.serving.simulator import SchedConfig, max_sustainable_qps
+
+
+def run():
+    sizes = query_sizes()
+    prof = paper_profile("dlrm-rmc1")
+    dev = SERVER_TYPES["T2"]
+    pl = enumerate_placements(prof, dev)[0]
+    base = None
+    for m, o in [(20, 1), (10, 2), (5, 4), (4, 5)]:
+        with timer() as t:
+            qps, res = max_sustainable_qps(
+                pl, dev, SchedConfig(batch=64, m=m, o=o), prof.sla_ms, sizes)
+        if base is None:
+            base = qps
+        emit(f"fig4_rmc1_T2_{m}x{o}", t.us,
+             f"qps={qps:.0f};vs20x1={qps/base:.2f}x;"
+             f"power={res.avg_power_w if res else 0:.0f}W")
+
+    # Fig 5c: idle-cycle growth with op-parallel workers (list-scheduling
+    # bound on the dependency levels; idle = 1 - work/(elapsed*workers))
+    for model in ("dlrm-rmc1", "dlrm-rmc3", "din"):
+        p = paper_profile(model)
+        t1 = cpu_stage_time(p.ops, 256, 1, dev, active_threads=1)
+        for w in (2, 3, 4):
+            tw = cpu_stage_time(p.ops, 256, w, dev, active_threads=1)
+            idle = max(0.0, 1.0 - t1 / (tw * w))
+            emit(f"fig5_idle_{model}_w{w}", tw * 1e6, f"idle={idle:.0%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: reference-path wall time on this host (the
+Pallas kernels target TPU; interpret-mode timing is not meaningful, so the
+CSV reports the jnp oracle throughput used for simulator calibration)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.embedding_bag.ref import hot_embedding_bag_ref
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (100_000, 64))
+    ids = jax.random.randint(key, (2048, 32), -1, 100_000)
+    f = jax.jit(hot_embedding_bag_ref)
+    us = _time(f, table, ids)
+    gb = 2048 * 32 * 64 * 4 / 1e9
+    emit("kernel_embedding_bag_ref", us, f"gather_GBps={gb/(us*1e-6):.1f}")
+
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    f2 = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = _time(f2, q, k, v)
+    fl = 4 * 1024 * 1024 * 8 * 64 / 2
+    emit("kernel_attention_ref", us, f"GFLOPs={fl/(us*1e-6)/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

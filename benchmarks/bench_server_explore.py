@@ -1,0 +1,33 @@
+"""Paper Fig. 15: 6 workloads x 10+1 server types — QPS and QPS-per-Watt
+classification table (reads the cached offline-profiling artifact)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timer
+from repro.configs.paper_models import PAPER_MODELS, paper_profile
+from repro.core.efficiency import build_table
+
+
+def run():
+    profiles = {name: paper_profile(name) for name in PAPER_MODELS}
+    with timer() as t:
+        table, records = build_table(profiles)
+    emit("fig15_table_build", t.us, f"pairs={len(records)}")
+    for j, w in enumerate(table.workloads):
+        best_qps = table.servers[int(table.qps[:, j].argmax())]
+        eff = table.qps[:, j] / table.power[:, j]
+        best_eff = table.servers[int(eff.argmax())]
+        emit(f"fig15_{w}", 0.0,
+             f"best_qps={best_qps};best_qps_per_watt={best_eff};"
+             f"qps_range={table.qps[:, j].min():.0f}-{table.qps[:, j].max():.0f}")
+    # paper claims: NMP best for memory-bound DLRMs, GPU for compute-bound
+    for w, expect in [("dlrm-rmc1", ("T3", "T4", "T5", "T8", "T9", "T10")),
+                      ("mt-wnd", ("T6", "T7", "T8", "T9", "T10", "T11-v5e"))]:
+        j = table.workloads.index(w)
+        eff = table.qps[:, j] / table.power[:, j]
+        best = table.servers[int(eff.argmax())]
+        emit(f"fig15_check_{w}", 0.0,
+             f"best={best};matches_paper_class={best in expect}")
+
+
+if __name__ == "__main__":
+    run()

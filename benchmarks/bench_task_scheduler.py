@@ -1,0 +1,34 @@
+"""Paper Fig. 14: Hercules vs baseline (DeepRecSys CPU / Baymax accel)
+latency-bounded throughput for the six models across server types."""
+from __future__ import annotations
+
+from benchmarks.common import emit, query_sizes, timer
+from repro.configs.paper_models import PAPER_MODELS, paper_profile
+from repro.core.baselines import baymax_qps, deeprecsys_qps
+from repro.core.devices import SERVER_TYPES
+from repro.core.gradient_search import gradient_search
+
+SERVERS = ("T2", "T3", "T7")
+
+
+def run():
+    sizes = query_sizes(400)
+    for model in PAPER_MODELS:
+        prof = paper_profile(model)
+        for server in SERVERS:
+            dev = SERVER_TYPES[server]
+            with timer() as t:
+                if dev.has_accel:
+                    q_base, _, _ = baymax_qps(prof, dev, sizes)
+                    base_name = "baymax"
+                else:
+                    q_base, _, _ = deeprecsys_qps(prof, dev, sizes)
+                    base_name = "deeprecsys"
+                res = gradient_search(prof, dev, sizes, o_grid=(1, 2, 5))
+            emit(f"fig14_{model}_{server}", t.us,
+                 f"baseline({base_name})={q_base:.0f};hercules={res.qps:.0f};"
+                 f"speedup={res.qps/max(q_base,1):.2f}x;plan={res.placement.plan}")
+
+
+if __name__ == "__main__":
+    run()

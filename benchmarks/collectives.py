@@ -1,0 +1,57 @@
+"""Diagnostic: top collectives per cell — the §Perf profiling tool.
+
+    PYTHONPATH=src python -m benchmarks.collectives --arch llama3.2-3b \
+        --shape train_4k [--layers 2]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import collections  # noqa: E402
+import dataclasses  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="unrolled layer override for LM cells")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from repro.common.types import ArchKind
+    from repro.configs.registry import get_arch
+    from repro.launch.dryrun import _COLL_RE, _shape_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    arch = get_arch(args.arch)
+    override = None
+    if args.layers and arch.KIND in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        override = dataclasses.replace(arch.FULL, n_layers=args.layers,
+                                       unroll_layers=True)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cell = build_cell(args.arch, args.shape, mesh=mesh,
+                      multi_pod=(args.mesh == "multi"), cfg_override=override)
+    hlo = cell.lower().compile().as_text()
+    agg = collections.Counter()
+    cnt = collections.Counter()
+    for m in _COLL_RE.finditer(hlo):
+        b = _shape_bytes(m.group(1))
+        key = (m.group(2), m.group(1)[:70])
+        agg[key] += b
+        cnt[key] += 1
+    total = sum(agg.values())
+    print(f"total result-bytes {total:.3e} across "
+          f"{sum(cnt.values())} collective ops")
+    for (kind, shape), b in agg.most_common(args.top):
+        print(f"{kind:20s} n={cnt[(kind, shape)]:3d} bytes={b:.3e}  {shape}")
+
+
+if __name__ == "__main__":
+    main()

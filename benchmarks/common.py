@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: query sizes, CSV emission, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def query_sizes(n: int = 500, seed: int = 0) -> np.ndarray:
+    """Paper Fig. 2b distribution."""
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row contract for benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

@@ -1,0 +1,75 @@
+"""Hillclimb driver: measure one cell's roofline terms with config overrides.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch llama3.2-3b \
+        --shape train_4k --set attn_impl=chunked --set attn_chunk=512
+
+Prints the three scan-corrected roofline terms, to be recorded as one
+hypothesis->change->before/after entry in EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg field override key=value")
+    args = ap.parse_args()
+
+    from benchmarks.roofline import _cost_of
+    from repro.common.types import ArchKind
+    from repro.configs.registry import get_arch
+
+    arch = get_arch(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cur = getattr(arch.FULL, k)
+        if isinstance(cur, bool):
+            v = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        overrides[k] = v
+    cfg = dataclasses.replace(arch.FULL, **overrides) if overrides else arch.FULL
+
+    if arch.KIND in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        L = cfg.n_layers
+        c1 = _cost_of(args.arch, args.shape, args.mesh,
+                      dataclasses.replace(cfg, n_layers=1, unroll_layers=True))
+        c2 = _cost_of(args.arch, args.shape, args.mesh,
+                      dataclasses.replace(cfg, n_layers=2, unroll_layers=True))
+        cor = {}
+        for k in ("flops", "bytes", "coll"):
+            body = max(c2[k] - c1[k], 0.0)
+            cor[k] = max(c1[k] - body, 0.0) + L * body
+    else:
+        cor = _cost_of(args.arch, args.shape, args.mesh, cfg if overrides else None)
+
+    t_c = cor["flops"] / PEAK_FLOPS
+    t_m = cor["bytes"] / HBM_BW
+    t_x = cor["coll"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    print(f"{args.arch} x {args.shape} overrides={overrides}")
+    print(f"  compute    {t_c*1e3:10.3f} ms")
+    print(f"  memory     {t_m*1e3:10.3f} ms")
+    print(f"  collective {t_x*1e3:10.3f} ms")
+    print(f"  bottleneck {max(terms, key=terms.get)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Two corrections on top of the raw dry-run numbers:
+
+1. **Scan trip count**: XLA's cost_analysis counts a while-loop body ONCE;
+   the LM cells scan over layers, so raw FLOPs under-count by ~L. The fix
+   lowers the same cell at n_layers=1 and n_layers=2 on the same mesh:
+   body = c(2) - c(1), outside = c(1) - body, total = outside + L * body.
+   Exact for uniform layers. (Collective bytes parsed from the HLO text
+   have the same once-per-body property and get the same correction.)
+
+2. **MODEL_FLOPS**: the analytic useful compute — 6·N·D (train) /
+   2·N_active·tokens (+ KV attention reads) for LM; per-item operator
+   profiles for recsys/GNN — compared against corrected HLO FLOPs x chips
+   to expose remat/redundancy waste.
+
+Run (needs the 512-device flag, hence a fresh process):
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+Writes artifacts/roofline/<mesh>.json + artifacts/roofline/table_<mesh>.md.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _cost_of(arch_id, shape_name, mesh_kind, cfg_override=None):
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cell = build_cell(arch_id, shape_name, mesh=mesh,
+                      multi_pod=(mesh_kind == "multi"),
+                      cfg_override=cfg_override)
+    compiled = cell.lower().compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    coll_total = sum(v for k, v in coll.items() if not k.endswith("_count"))
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll_total),
+    }
+
+
+def corrected_costs(arch_id, shape_name, mesh_kind):
+    """Scan-corrected per-device costs for one cell."""
+    from repro.common.types import ArchKind
+    from repro.configs.registry import get_arch
+
+    arch = get_arch(arch_id)
+    raw = json.loads(
+        (ART / "dryrun" / f"{arch_id}__{shape_name}__{mesh_kind}.json").read_text()
+    )
+    base = {
+        "flops": raw["flops_per_device"],
+        "bytes": raw["bytes_per_device"],
+        "coll": raw["collective_bytes_per_device"],
+    }
+    if arch.KIND not in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        return base, raw  # no scan: raw numbers are already exact
+
+    L = arch.FULL.n_layers
+    c1 = _cost_of(arch_id, shape_name, mesh_kind,
+                  dataclasses.replace(arch.FULL, n_layers=1, unroll_layers=True))
+    c2 = _cost_of(arch_id, shape_name, mesh_kind,
+                  dataclasses.replace(arch.FULL, n_layers=2, unroll_layers=True))
+    corrected = {}
+    for k in ("flops", "bytes", "coll"):
+        body = max(c2[k] - c1[k], 0.0)
+        outside = max(c1[k] - body, 0.0)
+        corrected[k] = outside + L * body
+    return corrected, raw
+
+
+def model_flops(arch_id, shape_name) -> float:
+    """Analytic useful FLOPs for the whole cell (all chips)."""
+    from repro.common.types import ArchKind
+    from repro.configs.registry import get_arch
+    from repro.core.workload import profile_gnn, profile_recsys
+
+    arch = get_arch(arch_id)
+    shape = next(s for s in arch.SHAPES if s.name == shape_name)
+    if arch.KIND in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        cfg = arch.FULL
+        n_active = cfg.active_param_count()
+        S, B = shape["seq_len"], shape["global_batch"]
+        L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        if shape.step == "train":
+            tokens = S * B
+            attn = 12 * L * cfg.n_heads * hd * S * tokens / 2  # fwd+bwd QK/AV
+            return 6.0 * n_active * tokens + attn
+        if shape.step == "prefill":
+            tokens = S * B
+            attn = 4 * L * cfg.n_heads * hd * S * tokens / 2
+            return 2.0 * n_active * tokens + attn
+        # decode: one token per sequence against an S-entry cache
+        tokens = B
+        attn = 4 * L * cfg.n_heads * hd * S * tokens
+        return 2.0 * n_active * tokens + attn
+    if arch.KIND == ArchKind.RECSYS:
+        prof = profile_recsys(arch.FULL, sla_ms=50.0)
+        per_item = prof.totals()["flops"]
+        items = shape.get("n_candidates") or shape["batch"]
+        mult = 3.0 if shape.step == "train" else 1.0
+        return per_item * items * mult
+    # GNN
+    cfgs = arch.SHAPE_CONFIGS[shape_name]
+    d = dict(shape.dims)
+    if cfgs.mode == "full":
+        n, e = d["n_nodes"], d["n_edges"]
+        f = 2.0 * e * cfgs.d_feat + 2.0 * 2.0 * n * cfgs.d_feat * cfgs.d_hidden
+        f += 2.0 * e * cfgs.d_hidden + 2.0 * 2.0 * n * cfgs.d_hidden * cfgs.d_hidden
+        f += 2.0 * n * cfgs.d_hidden * cfgs.n_classes
+        return 3.0 * f
+    prof = profile_gnn(cfgs, sla_ms=50.0, d_feat=cfgs.d_feat)
+    items = d.get("batch_nodes") or d.get("batch", 1)
+    return 3.0 * prof.totals()["flops"] * items
+
+
+def analyse(mesh_kind: str, cells=None) -> list[dict]:
+    from repro.configs.registry import get_arch, list_archs
+
+    rows = []
+    if cells is None:
+        cells = [(a, s.name) for a in list_archs() for s in get_arch(a).SHAPES]
+    for arch_id, shape_name in cells:
+        cor, raw = corrected_costs(arch_id, shape_name, mesh_kind)
+        n_dev = raw["n_devices"]
+        t_c = cor["flops"] / PEAK_FLOPS
+        t_m = cor["bytes"] / HBM_BW
+        t_x = cor["coll"] / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        bottleneck = max(terms, key=terms.get)
+        mf = model_flops(arch_id, shape_name)
+        useful = mf / max(cor["flops"] * n_dev, 1e-9)
+        t_total = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+            "n_devices": n_dev,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": bottleneck,
+            "model_flops": mf,
+            "hlo_flops_total": cor["flops"] * n_dev,
+            "useful_ratio": useful,
+            # roofline fraction: useful compute time / bound step time
+            "roofline_fraction": (mf / n_dev / PEAK_FLOPS) / max(t_total, 1e-12),
+            "corrected": cor,
+        })
+        print(f"{arch_id:18s} {shape_name:14s} "
+              f"C={t_c*1e3:9.3f}ms M={t_m*1e3:9.3f}ms X={t_x*1e3:9.3f}ms "
+              f"-> {bottleneck:10s} useful={useful:6.1%} "
+              f"roofline={rows[-1]['roofline_fraction']:6.1%}", flush=True)
+    return rows
+
+
+def write_table(rows, mesh_kind):
+    out = ART / "roofline"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{mesh_kind}.json").write_text(json.dumps(rows, indent=1))
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.3f} | "
+            f"{r['t_memory_s']*1e3:.3f} | {r['t_collective_s']*1e3:.3f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.1%} |"
+        )
+    (out / f"table_{mesh_kind}.md").write_text("\n".join(lines) + "\n")
+    print(f"wrote {out}/table_{mesh_kind}.md")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    args = ap.parse_args()
+    cells = [(args.arch, args.shape)] if args.arch else None
+    rows = analyse(args.mesh, cells)
+    if cells is None:
+        write_table(rows, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper's two-stage flow on one workload in ~a minute.
+
+1. Offline profiling — HW-aware partition + Algorithm-1 gradient search for
+   DLRM-RMC1 on a CPU server and on a CPU+GPU server.
+2. Online serving — provision a diurnal day on a small heterogeneous
+   cluster with the NH / greedy / Hercules policies and compare power.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_models import paper_profile
+from repro.core.cluster import EfficiencyTable, provision_day
+from repro.core.devices import SERVER_TYPES
+from repro.core.gradient_search import gradient_search
+from repro.serving.diurnal import diurnal_trace, load_increment_rate
+
+
+def main():
+    rng = np.random.default_rng(0)
+    sizes = np.clip(rng.lognormal(np.log(64), 1.1, 400).astype(np.int64), 1, 1024)
+
+    # ---- stage 1: offline profiling -------------------------------------
+    print("== offline profiling (Algorithm 1) ==")
+    prof = paper_profile("dlrm-rmc1")
+    tuples = {}
+    for server in ("T2", "T3", "T7"):
+        dev = SERVER_TYPES[server]
+        res = gradient_search(prof, dev, sizes, o_grid=(1, 2))
+        s = res.sched
+        tuples[server] = (res.qps, dev.peak_power_w)
+        print(f"  {server:3s}: QPS={res.qps:8.0f}  plan={res.placement.plan:10s} "
+              f"m={s.m:2d} d={s.batch:4d} o={s.o}  "
+              f"explored {res.evals}/{res.space_size} configs")
+
+    # ---- stage 2: online provisioning -----------------------------------
+    print("\n== online provisioning (diurnal day, Eq. 1-3) ==")
+    servers = list(tuples)
+    qps = np.array([[tuples[s][0]] for s in servers])
+    power = np.array([[tuples[s][1]] for s in servers])
+    table = EfficiencyTable(tuple(servers), ("dlrm-rmc1",), qps, power,
+                            np.array([70, 15, 5]))
+    peak = 0.3 * (table.avail[:, None] * qps).sum()
+    traces = diurnal_trace(peak, seed=1, n_steps=96)[None]
+    R = load_increment_rate(traces[0])
+    for pol in ("nh", "greedy", "hercules"):
+        r = provision_day(table, traces, policy=pol, overprovision=R)
+        print(f"  {pol:9s}: peak {r['peak_power_w']/1e3:6.1f} kW   "
+              f"avg {r['avg_power_w']/1e3:6.1f} kW   "
+              f"peak servers {r['peak_capacity']:3d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-parameter DLRM on the synthetic
+click-log pipeline for a few hundred steps, with fault-tolerant
+checkpointing (kill it mid-run and re-invoke: it resumes).
+
+Run:  PYTHONPATH=src python examples/train_dlrm.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.clicklog import ClickLogGenerator
+from repro.launch.steps import CellProgram, build_cell
+from repro.models.embedding import EmbeddingConfig
+from repro.models.recsys_base import RecsysConfig, binary_ce
+from repro.models import dlrm
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_model():
+    """~100M params: dominated by 8 x 400k x 32 embedding tables."""
+    return RecsysConfig(
+        name="dlrm-100m",
+        embedding=EmbeddingConfig(vocab_sizes=(400_000,) * 8, dim=32,
+                                  pooling=(16,) * 8),
+        n_dense=13,
+        bottom_mlp=(256, 128, 32),
+        top_mlp=(256, 128),
+        interaction="dot",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_dlrm_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_model()
+    opt = opt_lib.rowwise_adagrad(lr=0.02)
+
+    def step(state, batch):
+        def loss_fn(params):
+            return binary_ce(dlrm.apply(params, batch, cfg), batch["label"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        params, opt_state = opt.update(state["params"], grads, state["opt"])
+        return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    def init_state(key):
+        params = dlrm.init(key, cfg)
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        print(f"model: {n/1e6:.1f}M parameters")
+        return {"params": params, "opt": opt.init(params)}
+
+    gen = ClickLogGenerator(cfg, seed=0)
+
+    def batches():
+        while True:
+            b = gen.batch(args.batch)
+            yield jax.tree.map(jnp.asarray, b)
+
+    trainer = Trainer(jax.jit(step), init_state, batches(),
+                      TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                                    ckpt_dir=args.ckpt_dir, log_every=20))
+    state, hist = trainer.run(jax.random.PRNGKey(0))
+    print("step  loss")
+    for h in hist:
+        print(f"{h['step']:5d}  {h['loss']:.4f}  ({h['step_time_s']*1e3:.0f} ms)")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss did not improve"
+    print("final loss improved over initial — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Shared primitives: typed configs, init helpers, pytree utilities."""
+from repro.common.types import (
+    ArchKind,
+    ShapeSpec,
+    dtype_of,
+)
+from repro.common.init import (
+    normal_init,
+    uniform_init,
+    he_init,
+    xavier_init,
+)
+
+__all__ = [
+    "ArchKind",
+    "ShapeSpec",
+    "dtype_of",
+    "normal_init",
+    "uniform_init",
+    "he_init",
+    "xavier_init",
+]

@@ -1,0 +1,36 @@
+"""Parameter initializers (functional, rng-splitting convention).
+
+All model ``init`` functions thread a single PRNGKey and split per parameter;
+these helpers keep the scale conventions in one place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, minval=-scale, maxval=scale).astype(dtype)
+
+
+def he_init(key, shape, dtype=jnp.float32):
+    """Kaiming-normal for ReLU MLPs (fan_in = shape[0])."""
+    fan_in = shape[0]
+    return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def xavier_init(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-scale, maxval=scale).astype(dtype)
+
+
+def embedding_init(key, shape, dtype=jnp.float32):
+    """DLRM convention: U(-1/sqrt(vocab), 1/sqrt(vocab))."""
+    vocab = shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(vocab, jnp.float32))
+    return jax.random.uniform(key, shape, minval=-scale, maxval=scale).astype(dtype)

@@ -1,0 +1,62 @@
+"""Common typed configuration objects shared across the framework.
+
+Every architecture config (src/repro/configs/<id>.py) produces one of the
+model-family dataclasses defined alongside the model code; this module holds
+the pieces that are family-agnostic: the shape specs that pair with each
+architecture and small helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+
+class ArchKind(enum.Enum):
+    """Model family — drives which step functions and shardings exist."""
+
+    LM_DENSE = "lm_dense"
+    LM_MOE = "lm_moe"
+    GNN = "gnn"
+    RECSYS = "recsys"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell assigned to an architecture.
+
+    ``step`` selects which program the dry-run lowers:
+      - "train"   -> train_step (fwd+bwd+update)
+      - "prefill" -> serve_step over a full sequence (inference-prefill)
+      - "decode"  -> serve_step producing one token against a KV cache
+      - "serve"   -> batched inference forward (recsys / gnn serving)
+    Remaining fields are family-specific free-form dims.
+    """
+
+    name: str
+    step: str
+    dims: Mapping[str, Any]
+
+    def __getitem__(self, key: str) -> Any:
+        return self.dims[key]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self.dims.get(key, default)
+
+
+def dtype_of(name: str):
+    """Resolve a dtype name ('bf16'/'f32'/'i32'/...) to a jnp dtype."""
+    table = {
+        "bf16": jnp.bfloat16,
+        "f32": jnp.float32,
+        "f16": jnp.float16,
+        "i32": jnp.int32,
+        "i64": jnp.int64,
+        "u32": jnp.uint32,
+        "bool": jnp.bool_,
+    }
+    if name not in table:
+        raise ValueError(f"unknown dtype name: {name!r}")
+    return table[name]

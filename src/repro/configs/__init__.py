@@ -1,0 +1,11 @@
+"""Architecture configs.
+
+- ``paper_models``: the six models of paper Table I (DLRM-RMC1/2/3, MT-WnD,
+  DIN, DIEN) at production and small scale, used by the Hercules benchmarks.
+- one module per assigned architecture (``--arch <id>``), each exposing
+  ``FULL`` (exact assigned dims), ``SMOKE`` (reduced same-family config) and
+  ``SHAPES`` (the assigned input-shape cells).
+"""
+from repro.configs.registry import get_arch, list_archs
+
+__all__ = ["get_arch", "list_archs"]

@@ -1,0 +1,42 @@
+"""dlrm-rm2 [recsys]: n_dense=13 n_sparse=26 embed_dim=64
+bot_mlp=13-512-256-64 top_mlp=512-512-256-1 interaction=dot
+[arXiv:1906.00091; paper].
+
+Multi-hot pooling 64 per table (DLRM-class production lookups 20-160);
+26 tables x 5M rows x 64 = 33 GB f32 -> row-wise sharded. This is the
+arch most representative of the paper's technique (SparseNet-dominated)."""
+import jax.numpy as jnp
+
+from repro.common.types import ArchKind
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.embedding import EmbeddingConfig
+from repro.models.recsys_base import RecsysConfig
+
+ARCH_ID = "dlrm-rm2"
+KIND = ArchKind.RECSYS
+SHAPES = RECSYS_SHAPES
+SLA_MS = 50.0
+
+FULL = RecsysConfig(
+    name=ARCH_ID,
+    embedding=EmbeddingConfig(
+        vocab_sizes=(5_000_000,) * 26, dim=64, pooling=(64,) * 26,
+        dtype=jnp.bfloat16,  # §Perf iteration: bf16 tables halve the
+        # gather traffic and the Psum/gradient all-reduce wire bytes
+        # (row-wise AdaGrad keeps an f32 accumulator per row).
+    ),
+    n_dense=13,
+    bottom_mlp=(512, 256, 64),
+    top_mlp=(512, 512, 256),
+    interaction="dot",
+    dtype=jnp.bfloat16,
+)
+
+SMOKE = RecsysConfig(
+    name=ARCH_ID + "-smoke",
+    embedding=EmbeddingConfig(vocab_sizes=(1000,) * 4, dim=16, pooling=(8,) * 4),
+    n_dense=13,
+    bottom_mlp=(32, 16),
+    top_mlp=(64, 32),
+    interaction="dot",
+)

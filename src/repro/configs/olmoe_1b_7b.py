@@ -1,0 +1,45 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304, MoE 64e top-8 — 64 experts top-8 [arXiv:2409.02060]."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.common.types import ArchKind
+from repro.configs.shapes import LM_SHAPES
+from repro.models.layers import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "olmoe-1b-7b"
+KIND = ArchKind.LM_MOE
+SHAPES = LM_SHAPES
+
+FULL = LMConfig(
+    name=ARCH_ID,
+    # §Perf optimized defaults (baseline in artifacts/roofline/*baseline*):
+    # int8 KV cache (2x decode bytes). Chunked attention kept OFF for
+    # this arch: the HLO cost model (blind to VMEM residency) measures
+    # it as a net memory regression here — see EXPERIMENTS.md §Perf.
+    kv_quant="int8",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    head_dim=128,
+    rope_theta=10_000.0,
+    moe=MoEConfig(d_model=2048, d_ff=1024, n_experts=64, top_k=8),
+)
+
+SMOKE = LMConfig(
+    name=ARCH_ID + "-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=32,
+    vocab=512,
+    head_dim=16,
+    moe=MoEConfig(d_model=64, d_ff=32, n_experts=8, top_k=2),
+    dtype=jnp.float32,
+)

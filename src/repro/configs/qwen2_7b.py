@@ -1,0 +1,43 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — GQA, QKV bias [arXiv:2407.10671; hf]."""
+import jax.numpy as jnp
+
+from repro.common.types import ArchKind
+from repro.configs.shapes import LM_SHAPES
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "qwen2-7b"
+KIND = ArchKind.LM_DENSE
+SHAPES = LM_SHAPES
+
+FULL = LMConfig(
+    name=ARCH_ID,
+    # §Perf optimized defaults (baseline in artifacts/roofline/*baseline*):
+    # int8 KV cache (2x decode bytes). Chunked attention kept OFF for
+    # this arch: the HLO cost model (blind to VMEM residency) measures
+    # it as a net memory regression here — see EXPERIMENTS.md §Perf.
+    kv_quant="int8",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = LMConfig(
+    name=ARCH_ID + "-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab=512,
+    head_dim=32,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    dtype=jnp.float32,
+)

@@ -1,0 +1,57 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60e top-4 — 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]. The 4 shared experts are fused into one
+SwiGLU of width 4x1408 = 5632 (hf shared_expert_intermediate_size)."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.common.types import ArchKind
+from repro.configs.shapes import LM_SHAPES
+from repro.models.layers import MoEConfig
+from repro.models.transformer import LMConfig
+
+ARCH_ID = "qwen2-moe-a2.7b"
+KIND = ArchKind.LM_MOE
+SHAPES = LM_SHAPES
+
+FULL = LMConfig(
+    name=ARCH_ID,
+    # §Perf optimized defaults (baseline in artifacts/roofline/*baseline*):
+    # int8 KV cache (2x decode bytes). Chunked attention kept OFF for
+    # this arch: the HLO cost model (blind to VMEM residency) measures
+    # it as a net memory regression here — see EXPERIMENTS.md §Perf.
+    kv_quant="int8",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(
+        d_model=2048,
+        d_ff=1408,
+        n_experts=60,
+        top_k=4,
+        n_shared=4,
+        shared_d_ff=5632,
+    ),
+)
+
+SMOKE = LMConfig(
+    name=ARCH_ID + "-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=32,
+    vocab=512,
+    head_dim=16,
+    qkv_bias=True,
+    moe=MoEConfig(d_model=64, d_ff=32, n_experts=6, top_k=2, n_shared=1,
+                  shared_d_ff=64),
+    dtype=jnp.float32,
+)

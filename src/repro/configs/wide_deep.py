@@ -1,0 +1,35 @@
+"""wide-deep [recsys]: n_sparse=40 embed_dim=32 mlp=1024-512-256
+interaction=concat [arXiv:1606.07792; paper].
+
+Classic Wide&Deep uses one-hot categorical features (pooling=1); tables at
+production scale (2M rows each -> 2.56 GB at f32, sharded row-wise over the
+model axis)."""
+import jax.numpy as jnp
+
+from repro.common.types import ArchKind
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.embedding import EmbeddingConfig
+from repro.models.recsys_base import RecsysConfig
+
+ARCH_ID = "wide-deep"
+KIND = ArchKind.RECSYS
+SHAPES = RECSYS_SHAPES
+SLA_MS = 50.0
+
+FULL = RecsysConfig(
+    name=ARCH_ID,
+    embedding=EmbeddingConfig(
+        vocab_sizes=(2_000_000,) * 40, dim=32, pooling=(1,) * 40
+    ),
+    n_dense=13,
+    top_mlp=(1024, 512, 256),
+    interaction="concat",
+)
+
+SMOKE = RecsysConfig(
+    name=ARCH_ID + "-smoke",
+    embedding=EmbeddingConfig(vocab_sizes=(1000,) * 6, dim=8, pooling=(1,) * 6),
+    n_dense=13,
+    top_mlp=(64, 32),
+    interaction="concat",
+)

@@ -1,0 +1,76 @@
+"""State-of-the-art baseline task schedulers (paper §III).
+
+- DeepRecSys [ISCA'20]: CPU model-based scheduling with the full thread
+  count (one core per inference thread) exploring only the batch dimension
+  P(D); on accelerators, no model co-location and no query fusion.
+- Baymax [ASPLOS'16]: accelerator model co-location (searches m) but no
+  query fusion.
+
+Both receive the same HW-aware partition Hercules uses (the paper runs all
+Fig. 14 evaluations at production scale with the locality-aware partition),
+so the deltas isolate the *scheduling-space* contribution.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.devices import DeviceProfile
+from repro.core.gradient_search import BATCH_GRID
+from repro.core.partition import enumerate_placements
+from repro.core.workload import ModelProfile
+from repro.serving.simulator import SchedConfig, max_sustainable_qps
+
+
+def _best_accel_placement(profile, device):
+    pls = enumerate_placements(profile, device)
+    for plan in ("accel_full", "accel_hot", "accel_sd"):
+        for p in pls:
+            if p.plan == plan:
+                return p
+    return None
+
+
+def deeprecsys_qps(profile: ModelProfile, device: DeviceProfile,
+                   query_sizes: np.ndarray, seed: int = 0):
+    """DeepRecSys: CPU -> fixed cores x 1 threads, P(D) sweep;
+    accel -> single thread, no fusion, P(D) sweep."""
+    best = (0.0, None, None)
+    if device.has_accel:
+        pl = _best_accel_placement(profile, device)
+        if pl is not None:
+            for d in BATCH_GRID:
+                sched = SchedConfig(batch=d, m=1, o=1, fuse=False)
+                qps, res = max_sustainable_qps(pl, device, sched,
+                                               profile.sla_ms, query_sizes,
+                                               seed=seed)
+                if qps > best[0]:
+                    best = (qps, sched, pl)
+    else:
+        pl = enumerate_placements(profile, device)[0]  # cpu_model
+        m = device.cpu.cores
+        for d in BATCH_GRID:
+            sched = SchedConfig(batch=d, m=m, o=1)
+            qps, res = max_sustainable_qps(pl, device, sched, profile.sla_ms,
+                                           query_sizes, seed=seed)
+            if qps > best[0]:
+                best = (qps, sched, pl)
+    return best
+
+
+def baymax_qps(profile: ModelProfile, device: DeviceProfile,
+               query_sizes: np.ndarray, seed: int = 0):
+    """Baymax: accelerator co-location (sweep m), no query fusion."""
+    if not device.has_accel:
+        return deeprecsys_qps(profile, device, query_sizes, seed)
+    pl = _best_accel_placement(profile, device)
+    if pl is None:
+        return deeprecsys_qps(profile, device, query_sizes, seed)
+    best = (0.0, None, None)
+    for m in range(1, device.accel.max_colocate + 1):
+        for d in (256, 1024):  # batch cap only bounds the split granularity
+            sched = SchedConfig(batch=d, m=m, o=1, fuse=False)
+            qps, res = max_sustainable_qps(pl, device, sched, profile.sla_ms,
+                                           query_sizes, seed=seed)
+            if qps > best[0]:
+                best = (qps, sched, pl)
+    return best

@@ -1,0 +1,172 @@
+"""Cluster-level scheduling (paper §IV-C, §VI-C).
+
+Three provisioning policies over the workload-classification table
+(efficiency tuples):
+
+- ``nh``       : heterogeneity-oblivious — activates servers in a random
+                 order until each workload's load is covered.
+- ``greedy``   : Paragon/Quasar-style — per workload, activates the
+                 best-ranked (QPS/W) available server type; contention
+                 between workloads for the same type is resolved in
+                 arbitrary (workload-index) order, which is exactly the
+                 failure mode of Fig. 8.
+- ``hercules`` : the paper's contribution — global LP (Eq. 1-3) minimizing
+                 total provisioned power, then integer repair.
+
+``provision_day`` runs a policy across a diurnal trace and reports the
+capacity (activated servers) and provisioned-power time series.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.lp import round_and_repair, solve_relaxation
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficiencyTable:
+    """Workload classification (paper Fig. 9b): offline-profiled tuples."""
+
+    servers: tuple[str, ...]       # H server-type names
+    workloads: tuple[str, ...]     # M workload names
+    qps: np.ndarray                # [H, M] latency-bounded throughput
+    power: np.ndarray              # [H, M] provisioned power budget (W)
+    avail: np.ndarray              # [H] available servers N_h
+
+    def ranking(self, m: int, metric: str = "qps_per_watt") -> list[int]:
+        """Server-type ranking for workload m (greedy scheduler input)."""
+        if metric == "qps_per_watt":
+            score = self.qps[:, m] / np.maximum(self.power[:, m], 1e-9)
+        else:
+            score = self.qps[:, m]
+        return list(np.argsort(-score))
+
+
+@dataclasses.dataclass
+class ProvisionResult:
+    alloc: np.ndarray              # [H, M] integer server counts
+    provisioned_power_w: float
+    capacity: int                  # total activated servers
+    feasible: bool
+
+    @staticmethod
+    def infeasible(H: int, M: int) -> "ProvisionResult":
+        return ProvisionResult(np.zeros((H, M), np.int64), 0.0, 0, False)
+
+
+def _power_capacity(table: EfficiencyTable, alloc: np.ndarray) -> tuple[float, int]:
+    return float((alloc * table.power).sum()), int(alloc.sum())
+
+
+def provision_nh(table: EfficiencyTable, load: np.ndarray,
+                 overprovision: float = 0.0, seed: int = 0) -> ProvisionResult:
+    rng = np.random.default_rng(seed)
+    H, M = table.qps.shape
+    alloc = np.zeros((H, M), np.int64)
+    remaining = table.avail.astype(np.int64).copy()
+    target = load * (1.0 + overprovision)
+    served = np.zeros(M)
+    # random server activation order, round-robin over workloads needing load
+    pool = np.repeat(np.arange(H), remaining)
+    rng.shuffle(pool)
+    for h in pool:
+        deficit = target - served
+        if (deficit <= 1e-9).all():
+            break
+        m = int(rng.choice(np.flatnonzero(deficit > 1e-9)))
+        if table.qps[h, m] <= 0:
+            continue
+        alloc[h, m] += 1
+        served[m] += table.qps[h, m]
+    if ((target - served) > 1e-9).any():
+        return ProvisionResult.infeasible(H, M)
+    p, c = _power_capacity(table, alloc)
+    return ProvisionResult(alloc, p, c, True)
+
+
+def provision_greedy(table: EfficiencyTable, load: np.ndarray,
+                     overprovision: float = 0.0,
+                     metric: str = "qps_per_watt") -> ProvisionResult:
+    H, M = table.qps.shape
+    alloc = np.zeros((H, M), np.int64)
+    remaining = table.avail.astype(np.int64).copy()
+    target = load * (1.0 + overprovision)
+    for m in range(M):  # arbitrary workload order: the Fig. 8 deficiency
+        need = target[m]
+        for h in table.ranking(m, metric):
+            while need > 1e-9 and remaining[h] > 0 and table.qps[h, m] > 0:
+                alloc[h, m] += 1
+                remaining[h] -= 1
+                need -= table.qps[h, m]
+            if need <= 1e-9:
+                break
+        if need > 1e-9:
+            return ProvisionResult.infeasible(H, M)
+    p, c = _power_capacity(table, alloc)
+    return ProvisionResult(alloc, p, c, True)
+
+
+def provision_hercules(table: EfficiencyTable, load: np.ndarray,
+                       overprovision: float = 0.0) -> ProvisionResult:
+    """LP relaxation + integer repair; since rounding can regress past the
+    greedy integer solution on small instances, return the cheaper of the
+    two feasible allocations (the LP optimum is a lower bound on both)."""
+    H, M = table.qps.shape
+    candidates: list[ProvisionResult] = []
+    x = solve_relaxation(table.qps, table.power, load, table.avail, overprovision)
+    if x is not None:
+        n = round_and_repair(x, table.qps, table.power, load, table.avail,
+                             overprovision)
+        if n is not None:
+            p, c = _power_capacity(table, n)
+            candidates.append(ProvisionResult(n, p, c, True))
+    g = provision_greedy(table, load, overprovision)
+    if g.feasible:
+        candidates.append(g)
+    if not candidates:
+        return ProvisionResult.infeasible(H, M)
+    return min(candidates, key=lambda r: r.provisioned_power_w)
+
+
+POLICIES = {
+    "nh": provision_nh,
+    "greedy": provision_greedy,
+    "hercules": provision_hercules,
+}
+
+
+def provision_day(
+    table: EfficiencyTable,
+    traces: np.ndarray,            # [M, T] per-workload diurnal loads
+    policy: str = "hercules",
+    overprovision: float = 0.05,
+    seed: int = 0,
+) -> dict:
+    """Run a policy across the day; returns power/capacity time series."""
+    M, T = traces.shape
+    fn = POLICIES[policy]
+    power = np.zeros(T)
+    capacity = np.zeros(T, np.int64)
+    allocs = []
+    feasible = True
+    for t in range(T):
+        kwargs = {"overprovision": overprovision}
+        if policy == "nh":
+            kwargs["seed"] = seed + t
+        r = fn(table, traces[:, t], **kwargs)
+        feasible &= r.feasible
+        power[t] = r.provisioned_power_w
+        capacity[t] = r.capacity
+        allocs.append(r.alloc)
+    return {
+        "power_w": power,
+        "capacity": capacity,
+        "allocs": np.stack(allocs),
+        "feasible": feasible,
+        "peak_power_w": float(power.max()),
+        "avg_power_w": float(power.mean()),
+        "peak_capacity": int(capacity.max()),
+        "avg_capacity": float(capacity.mean()),
+    }

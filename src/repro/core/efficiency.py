@@ -1,0 +1,110 @@
+"""Offline profiling stage: build the workload-classification table.
+
+For every (workload, server-type) pair, run the gradient-based task-
+scheduling search and record the efficiency tuple (QPS_{m,h}, Power_{m,h})
+— paper Fig. 9(b). The provisioned power budget recorded is the server's
+peak power envelope (what the datacenter must budget when the server is
+activated), while the measured average power at peak QPS is kept for the
+energy-efficiency (QPS/W) rankings of Fig. 15.
+
+Profiling one pair takes seconds-to-a-minute of simulation, so results are
+cached as JSON under ``artifacts/``; benchmarks re-read them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.cluster import EfficiencyTable
+from repro.core.devices import DEFAULT_AVAILABILITY, SERVER_TYPES, DeviceProfile
+from repro.core.gradient_search import SearchResult, gradient_search
+from repro.core.workload import ModelProfile
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def default_query_sizes(n: int = 600, seed: int = 0) -> np.ndarray:
+    """Paper Fig. 2b query-size distribution."""
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+@dataclasses.dataclass
+class ProfiledPair:
+    workload: str
+    server: str
+    qps: float
+    avg_power_w: float
+    provisioned_power_w: float
+    plan: str
+    m: int
+    d: int
+    o: int
+    sd_sparse: int
+    p95_ms: float
+    evals: int
+    space_size: int
+
+
+def profile_pair(profile: ModelProfile, device: DeviceProfile,
+                 query_sizes: np.ndarray | None = None, seed: int = 0) -> ProfiledPair:
+    qs = query_sizes if query_sizes is not None else default_query_sizes()
+    r: SearchResult = gradient_search(profile, device, qs, seed=seed)
+    s = r.sched
+    return ProfiledPair(
+        workload=profile.name, server=device.name, qps=r.qps,
+        avg_power_w=r.power_w, provisioned_power_w=device.peak_power_w,
+        plan=r.placement.plan, m=s.m, d=s.batch, o=s.o, sd_sparse=s.sd_sparse,
+        p95_ms=r.p95_ms, evals=r.evals, space_size=r.space_size,
+    )
+
+
+def build_table(
+    profiles: dict[str, ModelProfile],
+    servers: dict[str, DeviceProfile] | None = None,
+    availability: dict[str, int] | None = None,
+    cache: str | None = "efficiency_table.json",
+    query_sizes: np.ndarray | None = None,
+    verbose: bool = False,
+) -> tuple[EfficiencyTable, dict]:
+    """Profile all pairs (cached); returns the table + raw pair records."""
+    servers = servers or SERVER_TYPES
+    availability = availability or DEFAULT_AVAILABILITY
+    cache_path = ARTIFACTS / cache if cache else None
+    records: dict[str, dict] = {}
+    if cache_path and cache_path.exists():
+        records = json.loads(cache_path.read_text())
+
+    changed = False
+    for wname, prof in profiles.items():
+        for sname, dev in servers.items():
+            key = f"{wname}|{sname}"
+            if key in records:
+                continue
+            pair = profile_pair(prof, dev, query_sizes)
+            records[key] = dataclasses.asdict(pair)
+            changed = True
+            if verbose:
+                print(f"profiled {key}: qps={pair.qps:.0f} plan={pair.plan}",
+                      flush=True)
+    if cache_path and changed:
+        cache_path.parent.mkdir(parents=True, exist_ok=True)
+        cache_path.write_text(json.dumps(records, indent=1))
+
+    snames = list(servers)
+    wnames = list(profiles)
+    qps = np.zeros((len(snames), len(wnames)))
+    power = np.zeros_like(qps)
+    for i, s in enumerate(snames):
+        for j, w in enumerate(wnames):
+            rec = records[f"{w}|{s}"]
+            qps[i, j] = rec["qps"]
+            power[i, j] = rec["provisioned_power_w"]
+    table = EfficiencyTable(
+        servers=tuple(snames), workloads=tuple(wnames), qps=qps, power=power,
+        avail=np.array([availability[s] for s in snames], np.int64),
+    )
+    return table, records

@@ -1,0 +1,119 @@
+"""LP solver for the provisioning problem (paper Eq. 1-3).
+
+minimize    sum_{h,m} x[h,m] * Power[h,m]
+subject to  sum_h x[h,m] * QPS[h,m] >= load[m] * (1 + R)   (per workload)
+            sum_m x[h,m] <= N[h]                            (per server type)
+            x >= 0
+
+Solved with scipy's HiGHS when available (the paper uses an interior-point
+solver), else a built-in dense simplex on the same standard form. The
+integer repair (`round_and_repair`) floors the relaxation and greedily adds
+the cheapest-per-QPS feasible servers until every load constraint holds —
+re-checked post-hoc, since the paper does not specify its rounding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from scipy.optimize import linprog as _scipy_linprog
+except Exception:  # pragma: no cover - scipy always present in this env
+    _scipy_linprog = None
+
+
+def solve_relaxation(qps: np.ndarray, power: np.ndarray, load: np.ndarray,
+                     avail: np.ndarray, overprovision: float = 0.0) -> np.ndarray | None:
+    """qps/power: [H, M]; load: [M]; avail: [H] -> x [H, M] or None."""
+    H, M = qps.shape
+    c = power.reshape(-1)
+    # A_ub x <= b_ub : capacity rows (H) and negated load rows (M)
+    A = np.zeros((H + M, H * M))
+    b = np.zeros(H + M)
+    for h in range(H):
+        A[h, h * M : (h + 1) * M] = 1.0
+        b[h] = avail[h]
+    for m in range(M):
+        for h in range(H):
+            A[H + m, h * M + m] = -qps[h, m]
+        b[H + m] = -load[m] * (1.0 + overprovision)
+    if _scipy_linprog is not None:
+        r = _scipy_linprog(c, A_ub=A, b_ub=b, bounds=(0, None), method="highs")
+        if not r.success:
+            return None
+        return r.x.reshape(H, M)
+    return _simplex(c, A, b, H, M)
+
+
+def _simplex(c, A, b, H, M):  # pragma: no cover - scipy fallback
+    """Big-M dense simplex on A x <= b (with possibly negative b)."""
+    n = len(c)
+    m = len(b)
+    # convert to equalities with slacks; rows with b<0 need artificials
+    T = np.hstack([A, np.eye(m), b.reshape(-1, 1)])
+    art_rows = [i for i in range(m) if b[i] < 0]
+    for i in art_rows:
+        T[i] = -T[i]
+    n_art = len(art_rows)
+    if n_art:
+        art = np.zeros((m, n_art))
+        for j, i in enumerate(art_rows):
+            art[i, j] = 1.0
+        T = np.hstack([T[:, :-1], art, T[:, -1:]])
+    big_m = 1e7
+    cost = np.concatenate([c, np.zeros(m), big_m * np.ones(n_art), [0.0]])
+    basis = []
+    for i in range(m):
+        if i in art_rows:
+            basis.append(n + m + art_rows.index(i))
+        else:
+            basis.append(n + i)
+    for _ in range(2000):
+        z = cost[basis] @ T[:, :-1] - cost[:-1]
+        j = int(np.argmax(z))
+        if z[j] <= 1e-9:
+            break
+        col = T[:, j]
+        ratios = np.where(col > 1e-12, T[:, -1] / np.maximum(col, 1e-12), np.inf)
+        i = int(np.argmin(ratios))
+        if not np.isfinite(ratios[i]):
+            return None
+        T[i] /= T[i, j]
+        for k in range(m):
+            if k != i:
+                T[k] -= T[k, j] * T[i]
+        basis[i] = j
+    x = np.zeros(n + m + n_art)
+    for i, bi in enumerate(basis):
+        x[bi] = T[i, -1]
+    if n_art and x[n + m :].sum() > 1e-6:
+        return None
+    return x[:n].reshape(H, M)
+
+
+def round_and_repair(x: np.ndarray, qps: np.ndarray, power: np.ndarray,
+                     load: np.ndarray, avail: np.ndarray,
+                     overprovision: float = 0.0) -> np.ndarray | None:
+    """Integerize the relaxation: floor, then greedily add the cheapest
+    power-per-QPS feasible server until all loads are covered."""
+    H, M = qps.shape
+    n = np.floor(x + 1e-9).astype(np.int64)
+    target = load * (1.0 + overprovision)
+    for _ in range(int(avail.sum()) + H * M):
+        served = (n * qps).sum(axis=0)
+        deficit = target - served
+        m = int(np.argmax(deficit))
+        if deficit[m] <= 1e-9:
+            return n
+        # cheapest marginal power per unit of *useful* QPS for workload m
+        cand, best_cost = None, np.inf
+        used = n.sum(axis=1)
+        for h in range(H):
+            if used[h] >= avail[h] or qps[h, m] <= 0:
+                continue
+            cost = power[h, m] / min(qps[h, m], deficit[m])
+            if cost < best_cost:
+                best_cost, cand = cost, h
+        if cand is None:
+            return None  # infeasible: not enough capacity
+        n[cand, m] += 1
+    return None

@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic click logs (paper Fig. 2 distributions),
+graph loaders + neighbor sampler, LM token batches."""

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- embedding_bag: fused SparseLengthsSum over a VMEM-resident hot table —
+  the TPU-native adaptation of the paper's hot-embedding partition (the
+  NMP Gather-Reduce insight mapped to the HBM->VMEM hierarchy).
+- flash_attention: blocked causal GQA attention (prefill) + split-KV decode
+  for the LM serving cells.
+- dot_interaction: DLRM pairwise-dot feature interaction fused with the
+  triu extraction.
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with interpret=True fallback off-TPU) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes against the oracle.
+"""

@@ -1,0 +1,61 @@
+"""Fused hot-embedding SparseLengthsSum Pallas kernel.
+
+TPU adaptation of the paper's locality-aware hot-table partition: the hot
+table (sized by repro.core.partition to the fast-memory budget) is pinned
+whole in VMEM; each grid step streams one batch tile of ids into VMEM and
+performs the gather + pool on-chip, writing only the pooled [tile, D] rows
+back. This replaces the NMP DIMM's rank-parallel Gather-Reduce with a
+VMEM-resident gather: HBM sees ids in and pooled vectors out — never the
+P individual rows.
+
+Grid: (B // tile_b,). BlockSpecs:
+    table [H, D]    — constant block (index_map -> (0, 0)), lives in VMEM
+                      across grid steps; H*D*dtype must fit the ~16 MB
+                      twin-buffer budget (the partitioner guarantees it).
+    ids   [tile_b, P] int32 — per-step tile.
+    out   [tile_b, D]       — per-step tile.
+
+The inner gather uses jnp.take on the VMEM-resident block (vector gather
+on current TPU gens; exact in interpret mode, which is how this container
+validates it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(table_ref, ids_ref, out_ref):
+    ids = ids_ref[...]                       # [tile_b, P] int32
+    table = table_ref[...]                   # [H, D]
+    tile_b, P = ids.shape
+    mask = (ids >= 0).astype(table.dtype)    # [tile_b, P]
+    safe = jnp.maximum(ids, 0)
+    rows = jnp.take(table, safe.reshape(-1), axis=0)
+    rows = rows.reshape(tile_b, P, -1)
+    out_ref[...] = (rows * mask[..., None]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def hot_embedding_bag_pallas(table: jax.Array, ids: jax.Array, *,
+                             tile_b: int = 128, interpret: bool = False):
+    """table [H, D]; ids [B, P] (-1 padded) -> pooled [B, D]."""
+    B, P = ids.shape
+    H, D = table.shape
+    if B % tile_b:
+        raise ValueError(f"batch {B} must be a multiple of tile_b {tile_b}")
+    grid = (B // tile_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((H, D), lambda i: (0, 0)),       # table resident
+            pl.BlockSpec((tile_b, P), lambda i: (i, 0)),  # ids tile
+        ],
+        out_specs=pl.BlockSpec((tile_b, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(table, ids)

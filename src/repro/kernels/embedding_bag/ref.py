@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused hot-embedding SparseLengthsSum kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hot_embedding_bag_ref(table, ids, weights=None):
+    """table [H, D]; ids [B, P] int32 (-1 padded); optional per-sample
+    weights [B, P] -> pooled [B, D] (sum of table rows per bag)."""
+    mask = (ids >= 0)
+    safe = jnp.maximum(ids, 0)
+    rows = jnp.take(table, safe, axis=0)             # [B, P, D]
+    w = mask.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    return (rows * w[..., None]).sum(axis=1)

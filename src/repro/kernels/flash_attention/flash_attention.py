@@ -1,0 +1,114 @@
+"""Blocked causal GQA flash attention (Pallas TPU).
+
+Grid (B*H, Tq // bq, Tk // bk): the KV-block axis is innermost and
+sequential, carrying the running (max, denom, accum) in VMEM scratch — the
+standard IO-aware schedule: Q tiles stay resident, KV streams once through
+VMEM, O is written once. GQA is folded by indexing the KV head as
+``h // group`` in the KV BlockSpec index map, so no KV duplication is ever
+materialized.
+
+Block sizes default to (bq, bk) = (128, 128): MXU-aligned on the lane dim
+(head_dim is the minor dim of every matmul) and the working set
+(q + k + v + acc tiles, ~4 x 128 x 128 x 4 B) sits far under the ~16 MB
+VMEM budget, leaving room for the pipeline emitter's double buffering.
+
+Causal handling: whole-tile skip for blocks strictly above the diagonal
+(predicated on grid coordinates via pl.when) and an element mask on
+diagonal blocks; ``q_offset`` aligns decode/cache positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale, causal, q_offset, bq, bk, n_kblocks):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + qb * bq
+    k_start = kb * bk
+    # whole-tile causal skip: live unless every query precedes every key
+    live = jnp.asarray(True) if not causal else (q_start + bq - 1 >= k_start)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)          # [bk, hd]
+        s = (q @ k.T) * scale                     # [bq, bk]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                       # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                    # [bq, bk]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(kb == n_kblocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal=True, q_offset=0,
+                           bq=128, bk=128, interpret=False):
+    """q [B, Tq, H, hd]; k/v [B, Tk, KVH, hd] -> [B, Tq, H, hd]."""
+    B, Tq, H, hd = q.shape
+    Tk, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    if Tq % bq or Tk % bk:
+        raise ValueError(f"Tq {Tq} % bq {bq} or Tk {Tk} % bk {bk} != 0")
+
+    # head-major layouts: q [B*H, Tq, hd]; kv [B*KVH, Tk, hd]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, Tk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, Tk, hd)
+
+    grid = (B * H, Tq // bq, Tk // bk)
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / np.sqrt(hd), causal=causal,
+        q_offset=q_offset, bq=bq, bk=bk, n_kblocks=Tk // bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Tq, hd).transpose(0, 2, 1, 3)

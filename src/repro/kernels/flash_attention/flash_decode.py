@@ -1,0 +1,102 @@
+"""Split-KV flash decode (FlashDecoding-style) Pallas kernel.
+
+Decode attends one query token against a long KV cache; a single-block
+kernel leaves the chip idle (one query row). The split-KV schedule carves
+the cache into S // bk chunks, computes per-chunk partial
+(max, denom, weighted-sum) — embarrassingly parallel across chunks — and
+combines with a log-sum-exp merge. The same merge (exposed as
+``lse_combine``) is what the DISTRIBUTED flash decode in repro.dist.decode
+uses to combine per-shard partials across the model axis for the long_500k
+cell, so the on-chip and cross-chip schedules share one correctness oracle.
+
+Grid (B*KVH, n_chunks): per (batch x kv-head), each chunk produces
+partials; group query heads for that kv head are processed together as a
+[group, hd] tile (GQA: the MXU sees a [group, bk] x [bk, hd] matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *, scale, kv_len,
+                   bk):
+    """One KV chunk: q [group, hd]; k/v [bk, hd] -> partial m/l/o."""
+    c = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)              # [group, hd]
+    k = k_ref[0].astype(jnp.float32)              # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = (q @ k.T) * scale                         # [group, bk]
+    kpos = c * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+    m = s.max(axis=1, keepdims=True)              # [group, 1]
+    p = jnp.exp(s - m)
+    l = p.sum(axis=1, keepdims=True)
+    o = p @ v                                     # [group, hd]
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def lse_combine(m, l, o, axis: int):
+    """Merge split-softmax partials along `axis`.
+
+    m/l: [..., n, group, 1]; o: [..., n, group, hd] -> combined [..., group, hd]
+    plus the combined (m, l) for further hierarchical merging."""
+    m_max = m.max(axis=axis, keepdims=True)
+    alpha = jnp.exp(m - m_max)
+    l_comb = (l * alpha).sum(axis=axis)
+    o_comb = (o * alpha).sum(axis=axis)
+    return m_max.squeeze(axis), l_comb, o_comb
+
+
+@functools.partial(jax.jit, static_argnames=("kv_len", "bk", "interpret"))
+def flash_decode_pallas(q, k, v, *, kv_len, bk=512, interpret=False):
+    """q [B, 1, H, hd]; k/v [B, S, KVH, hd]; kv_len: live cache length.
+
+    Returns [B, 1, H, hd]."""
+    B, _, H, hd = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+    bk = min(bk, S)
+    if S % bk:
+        raise ValueError(f"S {S} % bk {bk} != 0")
+    n_chunks = S // bk
+
+    qf = q.reshape(B, KVH, group, hd).reshape(B * KVH, group, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+
+    grid = (B * KVH, n_chunks)
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / np.sqrt(hd), kv_len=kv_len, bk=bk
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, hd), lambda h, c: (h, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, 1), lambda h, c: (h, c, 0, 0)),
+            pl.BlockSpec((1, 1, group, 1), lambda h, c: (h, c, 0, 0)),
+            pl.BlockSpec((1, 1, group, hd), lambda h, c: (h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * KVH, n_chunks, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KVH, n_chunks, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B * KVH, n_chunks, group, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    _, l_c, o_c = lse_combine(m, l, o, axis=1)    # over chunks
+    out = (o_c / jnp.maximum(l_c, 1e-30)).astype(q.dtype)
+    return out.reshape(B, KVH, group, hd).reshape(B, 1, H, hd)

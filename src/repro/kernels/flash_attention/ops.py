@@ -1,0 +1,25 @@
+"""Jitted wrappers: Pallas on TPU, interpret mode elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.flash_decode import flash_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, bq=128, bk=128):
+    """Blocked GQA attention: q [B, Tq, H, hd], k/v [B, Tk, KVH, hd]."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
+        interpret=not _on_tpu(),
+    )
+
+
+def flash_decode(q, k, v, *, kv_len, bk=512):
+    """Split-KV decode: q [B, 1, H, hd] against cache k/v [B, S, KVH, hd]."""
+    return flash_decode_pallas(q, k, v, kv_len=kv_len, bk=bk,
+                               interpret=not _on_tpu())

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernels (GQA, causal offset)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None):
+    """q [B, Tq, H, hd]; k/v [B, Tk, KVH, hd] -> [B, Tq, H, hd].
+
+    Query i's absolute position is q_offset + i; with causal it attends to
+    kv j <= q_offset + i. kv_len (scalar or [B]) masks the cache tail.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+    qg = q.reshape(B, Tq, KVH, group, hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k) / np.sqrt(hd)
+    logits = logits.astype(jnp.float32)
+    jpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = jpos <= (jnp.arange(Tq)[:, None] + q_offset)
+    if kv_len is not None:
+        mask = mask & (jpos < jnp.asarray(kv_len).reshape(-1)[0])
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    return out.reshape(B, Tq, H, hd)

@@ -1,0 +1,205 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract the roofline terms.
+
+MUST be the process entry point (or imported before any other jax-touching
+module) — the XLA_FLAGS line below runs before any jax import and pins 512
+host devices. Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-rm2 \
+        --shape train_batch --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, and per-collective byte counts parsed from
+the partitioned HLO (cost_analysis has no collective term — DESIGN.md §6).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+# effective bytes-on-wire multiplier per collective (ring algorithms),
+# relative to the RESULT shape bytes.
+_WIRE_FACTOR = {
+    "all-gather": 1.0,        # each device receives ~result bytes
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,    # sends ~operand, receives result; operand ~ result*n
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes (per device) from partitioned HLO."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0.0) + b * _WIRE_FACTOR[kind]
+        counts[kind + "_count"] = counts.get(kind + "_count", 0) + 1
+    out.update(counts)
+    return out
+
+
+def run_cell_dryrun(arch_id: str, shape_name: str, mesh_kind: str,
+                    save: bool = True, verbose: bool = True) -> dict:
+    import jax
+
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.launch.steps import build_cell
+
+    multi_pod = mesh_kind == "multi"
+    if mesh_kind == "debug":
+        mesh = make_debug_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh=mesh, multi_pod=multi_pod)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll_total = sum(v for k, v in coll.items() if not k.endswith("_count"))
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "time_lower_s": round(t_lower, 2),
+        "time_compile_s": round(t_compile, 2),
+        # cost_analysis is PER-DEVICE (the partitioned module)
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "memory": {
+            "argument_size_bytes": mem.argument_size_in_bytes,
+            "output_size_bytes": mem.output_size_in_bytes,
+            "temp_size_bytes": mem.temp_size_in_bytes,
+            "alias_size_bytes": mem.alias_size_in_bytes,
+            "peak_memory_bytes": mem.peak_memory_in_bytes,
+            "generated_code_size_bytes": mem.generated_code_size_in_bytes,
+        },
+        # roofline terms (seconds) per §Roofline
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_s": bytes_accessed / HBM_BW,
+        "t_collective_s": coll_total / ICI_BW,
+    }
+    terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+             "collective": rec["t_collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+
+    if verbose:
+        live = ((rec["memory"]["argument_size_bytes"] or 0)
+                + (rec["memory"]["temp_size_bytes"] or 0)) / max(n_dev, 1)
+        print(f"[{arch_id} x {shape_name} x {mesh_kind}({n_dev})] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"flops/dev {flops:.3e} bytes/dev {bytes_accessed:.3e} "
+              f"coll/dev {coll_total:.3e} | args+temp {live/1e9:.2f} GB | "
+              f"bottleneck {rec['bottleneck']}", flush=True)
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        p = ARTIFACTS / f"{arch_id}__{shape_name}__{mesh_kind}.json"
+        p.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells():
+    from repro.configs.registry import get_arch, list_archs
+
+    for arch_id in list_archs():
+        for shape in get_arch(arch_id).SHAPES:
+            yield arch_id, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both", "debug"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch_id, shape_name in cells:
+        for mk in meshes:
+            out = ARTIFACTS / f"{arch_id}__{shape_name}__{mk}.json"
+            if args.skip_existing and out.exists():
+                print(f"skip {out.name}")
+                continue
+            try:
+                run_cell_dryrun(arch_id, shape_name, mk)
+            except Exception as e:
+                failures.append((arch_id, shape_name, mk, repr(e)[:200]))
+                print(f"FAIL [{arch_id} x {shape_name} x {mk}]: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,492 @@
+"""Per-(architecture x shape) program builders.
+
+``build_cell(arch_id, shape_name, mesh=None, multi_pod=False)`` returns a
+CellProgram bundling the jittable step function, abstract input/parameter
+specs (ShapeDtypeStruct — no allocation), and in/out shardings. The same
+builder serves the smoke tests (mesh=None, SMOKE config, real arrays) and
+the 512-chip dry-run (FULL config, abstract lowering only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.types import ArchKind, ShapeSpec
+from repro.configs.registry import get_arch
+from repro.dist import logical
+from repro.dist.sharding import logical_rules, opt_spec_tree, param_spec_tree
+from repro.models import din as din_lib
+from repro.models import dlrm as dlrm_lib
+from repro.models import gnn as gnn_lib
+from repro.models import mind as mind_lib
+from repro.models import transformer as tf_lib
+from repro.models import widedeep as wnd_lib
+from repro.models.recsys_base import RecsysConfig, binary_ce
+from repro.models.recsys_base import input_specs as recsys_input_specs
+from repro.train import optimizer as opt_lib
+
+RECSYS_APPLY = {
+    "dot": dlrm_lib.apply,
+    "concat": wnd_lib.apply,
+    "target-attn": din_lib.apply,
+    "multi-interest": mind_lib.apply,
+}
+RECSYS_INIT = {
+    "dot": dlrm_lib.init,
+    "concat": wnd_lib.init,
+    "target-attn": din_lib.init,
+    "multi-interest": mind_lib.init,
+}
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch_id: str
+    shape: ShapeSpec
+    kind: ArchKind
+    cfg: Any
+    step_fn: Callable                  # step(state, batch) -> outputs
+    state_specs: Any                   # ShapeDtypeStruct pytree
+    batch_specs: Any                   # ShapeDtypeStruct pytree
+    state_shardings: Any = None        # NamedSharding pytree (mesh runs)
+    batch_shardings: Any = None
+    mesh: Any = None
+    multi_pod: bool = False
+    donate_state: bool = True
+    donate_batch: bool = False         # decode: donate the KV cache
+    init_state: Callable | None = None  # real init for smoke runs
+    rules: dict | None = None          # logical axis bindings
+
+    def _ctx(self):
+        if self.mesh is None:
+            import contextlib
+
+            return contextlib.nullcontext()
+        rules = self.rules or logical_rules(self.kind, self.multi_pod)
+        return logical.axis_rules(self.mesh, rules)
+
+    def jitted(self):
+        kwargs = {}
+        if self.mesh is not None:
+            kwargs["in_shardings"] = (self.state_shardings, self.batch_shardings)
+        donate = []
+        if self.donate_state:
+            donate.append(0)
+        if self.donate_batch:
+            donate.append(1)
+        if donate:
+            kwargs["donate_argnums"] = tuple(donate)
+        return jax.jit(self.step_fn, **kwargs)
+
+    def lower(self):
+        with self._ctx():
+            return self.jitted().lower(self.state_specs, self.batch_specs)
+
+    def run(self, state, batch):
+        with self._ctx():
+            return self.jitted()(state, batch)
+
+
+def _shardings_from_specs(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(arch, shape: ShapeSpec, mesh, multi_pod: bool) -> CellProgram:
+    cfg = arch.FULL if mesh is not None else arch.SMOKE
+    kind = arch.KIND
+    dp = _dp_axes(multi_pod)
+    B = shape["global_batch"]
+    S = shape["seq_len"]
+    if mesh is None:  # smoke: shrink the cell
+        B, S = 4, 32
+
+    params_shape = jax.eval_shape(lambda: tf_lib.init(jax.random.PRNGKey(0), cfg))
+    p_specs = param_spec_tree(kind, params_shape)
+
+    if shape.step == "train":
+        opt = opt_lib.adamw(lr=3e-4)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_specs = opt_spec_tree(kind, opt_shape, p_specs)
+        state_specs = {"params": params_shape, "opt": opt_shape}
+        state_spec_tree = {"params": p_specs, "opt": o_specs}
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_spec_tree = {"tokens": P(dp, None)}
+
+        def step(state, batch):
+            loss, grads = jax.value_and_grad(tf_lib.lm_loss)(
+                state["params"], batch, cfg
+            )
+            params, opt_state = opt.update(state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt_state}, {"loss": loss}
+
+        def init_state(key):
+            params = tf_lib.init(key, cfg)
+            return {"params": params, "opt": opt.init(params)}
+
+    elif shape.step == "prefill":
+        state_specs = params_shape
+        state_spec_tree = p_specs
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_spec_tree = {"tokens": P(dp, None)}
+
+        def step(params, batch):
+            cache = tf_lib.init_kv_cache(cfg, B, S)
+            last, new_cache = tf_lib.prefill(params, batch["tokens"], cache, cfg)
+            return {"logits": last, "cache": new_cache}
+
+        def init_state(key):
+            return tf_lib.init(key, cfg)
+
+    else:  # decode (decode_32k / long_500k): one token against an S cache
+        state_specs = params_shape
+        state_spec_tree = p_specs
+        cache_specs = tf_lib.kv_cache_specs(cfg, B, S)
+        # KV sharding: batch over dp when it divides; sequence over "model"
+        # (and over dp too when batch == 1 — long_500k's only option).
+        if B >= 16:
+            kv_spec = P(None, dp, "model", None, None)
+        else:
+            kv_spec = P(None, None, dp + ("model",), None, None)
+        batch_specs = {
+            "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache_specs,
+        }
+        batch_spec_tree = {
+            "token": P(dp, None) if B >= 16 else P(None, None),
+            "cache": {key: kv_spec for key in cache_specs},
+        }
+        pos = S - 1
+
+        def step(params, batch):
+            logits, new_cache = tf_lib.decode_step(
+                params, batch["token"], batch["cache"], pos, cfg
+            )
+            return {"logits": logits, "cache": new_cache}
+
+        def init_state(key):
+            return tf_lib.init(key, cfg)
+
+    rules = logical_rules(kind, multi_pod)
+    if getattr(cfg, "seq_shard", False):
+        rules = dict(rules)
+        rules["residual_seq"] = "model"
+    if shape.step == "decode" and B < 16:
+        rules = dict(rules)
+        rules["batch"] = None  # batch=1: token replicated, KV seq-sharded
+    return CellProgram(
+        arch_id=arch.ARCH_ID, shape=shape, kind=kind, cfg=cfg, step_fn=step,
+        state_specs=state_specs, batch_specs=batch_specs,
+        state_shardings=_shardings_from_specs(mesh, state_spec_tree) if mesh else None,
+        batch_shardings=_shardings_from_specs(mesh, batch_spec_tree) if mesh else None,
+        mesh=mesh, multi_pod=multi_pod,
+        donate_state=(shape.step == "train"),
+        donate_batch=(shape.step == "decode"),
+        init_state=init_state,
+        rules=rules,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_spec_tree(specs: dict, dp) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if v.ndim >= 1 and v.shape[0] > 1:
+            out[k] = P(dp, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P(*([None] * v.ndim))
+    return out
+
+
+def _recsys_cell(arch, shape: ShapeSpec, mesh, multi_pod: bool) -> CellProgram:
+    cfg: RecsysConfig = arch.FULL if mesh is not None else arch.SMOKE
+    kind = arch.KIND
+    dp = _dp_axes(multi_pod)
+    B = shape["batch"]
+    n_cand = shape.get("n_candidates", 0)
+    if mesh is None:
+        B = 16
+        n_cand = 128 if n_cand else 0
+
+    apply_fn = RECSYS_APPLY[cfg.interaction]
+    init_fn = RECSYS_INIT[cfg.interaction]
+    params_shape = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0), cfg))
+    p_specs = param_spec_tree(kind, params_shape)
+
+    if shape.step == "train":
+        opt = opt_lib.rowwise_adagrad(lr=0.01)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        o_specs = opt_spec_tree(kind, opt_shape, p_specs)
+        state_specs = {"params": params_shape, "opt": opt_shape}
+        state_spec_tree = {"params": p_specs, "opt": o_specs}
+        specs = recsys_input_specs(cfg, B, with_labels=True)
+        batch_specs = specs
+        batch_spec_tree = _recsys_batch_spec_tree(specs, dp)
+
+        def step(state, batch):
+            def loss_fn(params):
+                logits = apply_fn(params, batch, cfg)
+                return binary_ce(logits, batch["label"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            params, opt_state = opt.update(state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt_state}, {"loss": loss}
+
+        def init_state(key):
+            params = init_fn(key, cfg)
+            return {"params": params, "opt": opt.init(params)}
+
+    elif n_cand:  # retrieval_cand: one user against n_cand items
+        B = shape["batch"]  # always 1 (the retrieval query)
+        state_specs = params_shape
+        state_spec_tree = p_specs
+        if cfg.interaction == "multi-interest":
+            specs = recsys_input_specs(cfg, B, n_candidates=n_cand)
+            batch_spec_tree = _recsys_batch_spec_tree(specs, dp)
+
+            def step(params, batch):
+                return {"scores": mind_lib.retrieval_scores(
+                    params, batch, batch["candidate_ids"], cfg)}
+        elif cfg.interaction == "target-attn":
+            specs = recsys_input_specs(cfg, B, n_candidates=n_cand)
+            batch_spec_tree = _recsys_batch_spec_tree(specs, dp)
+
+            def step(params, batch):
+                return {"scores": din_lib.retrieval_scores(
+                    params, batch, batch["candidate_ids"], cfg)}
+        else:
+            # CTR rankers score the 1M candidates as a bulk batch
+            specs = recsys_input_specs(cfg, n_cand)
+            batch_spec_tree = _recsys_batch_spec_tree(specs, dp)
+
+            def step(params, batch):
+                return {"scores": apply_fn(params, batch, cfg)}
+        batch_specs = specs
+
+        def init_state(key):
+            return init_fn(key, cfg)
+
+    else:  # serve
+        state_specs = params_shape
+        state_spec_tree = p_specs
+        specs = recsys_input_specs(cfg, B)
+        batch_specs = specs
+        batch_spec_tree = _recsys_batch_spec_tree(specs, dp)
+
+        def step(params, batch):
+            return {"scores": apply_fn(params, batch, cfg)}
+
+        def init_state(key):
+            return init_fn(key, cfg)
+
+    return CellProgram(
+        arch_id=arch.ARCH_ID, shape=shape, kind=kind, cfg=cfg, step_fn=step,
+        state_specs=state_specs, batch_specs=batch_specs,
+        state_shardings=_shardings_from_specs(mesh, state_spec_tree) if mesh else None,
+        batch_shardings=_shardings_from_specs(mesh, batch_spec_tree) if mesh else None,
+        mesh=mesh, multi_pod=multi_pod,
+        donate_state=(shape.step == "train"),
+        init_state=init_state,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _gnn_cell(arch, shape: ShapeSpec, mesh, multi_pod: bool) -> CellProgram:
+    kind = arch.KIND
+    dp = _dp_axes(multi_pod)
+    if mesh is None:
+        cfg = arch.SMOKE
+    else:
+        cfg = arch.SHAPE_CONFIGS[shape.name]
+
+    n_dev = 1
+    if mesh is not None:
+        for a in mesh.axis_names:
+            n_dev *= mesh.shape[a]
+
+    opt = opt_lib.adamw(lr=1e-3)
+
+    if cfg.mode == "full":
+        N = _pad_to(shape["n_nodes"], max(n_dev, 1)) if mesh else 64
+        E = _pad_to(shape["n_edges"], max(n_dev, 1)) if mesh else 256
+        params_shape = jax.eval_shape(lambda: gnn_lib.init(jax.random.PRNGKey(0), cfg))
+        p_specs = param_spec_tree(kind, params_shape)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_specs = {"params": params_shape, "opt": opt_shape}
+        state_spec_tree = {"params": p_specs,
+                           "opt": opt_spec_tree(kind, opt_shape, p_specs)}
+        all_ax = tuple(mesh.axis_names) if mesh else ()
+        batch_specs = {
+            "feats": jax.ShapeDtypeStruct((N, cfg.d_feat), cfg.dtype),
+            "edges": jax.ShapeDtypeStruct((2, E), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((N,), jnp.int32),
+            "label_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+        }
+        batch_spec_tree = {
+            "feats": P(all_ax, None),
+            "edges": P(None, all_ax),
+            "labels": P(all_ax),
+            "label_mask": P(all_ax),
+        }
+
+        the_mesh = mesh
+
+        def step(state, batch):
+            def loss_fn(params):
+                if the_mesh is not None:
+                    from repro.dist.gnn import apply_full_sharded
+
+                    return apply_full_sharded(
+                        params, batch["feats"], batch["edges"], batch["labels"],
+                        batch["label_mask"], cfg, the_mesh, N,
+                    )
+                logits = gnn_lib.apply_full(params, batch["feats"], batch["edges"], cfg)
+                return gnn_lib.softmax_ce(logits, batch["labels"], batch["label_mask"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            params, opt_state = opt.update(state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    elif cfg.mode == "mini":
+        B = shape.get("batch_nodes", 1024) if mesh else 8
+        fan = shape.get("fanout", cfg.fanout)
+        specs = gnn_lib.input_specs(cfg, {"batch_nodes": B, "fanout": fan})
+        params_shape = jax.eval_shape(lambda: gnn_lib.init(jax.random.PRNGKey(0), cfg))
+        p_specs = param_spec_tree(kind, params_shape)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_specs = {"params": params_shape, "opt": opt_shape}
+        state_spec_tree = {"params": p_specs,
+                           "opt": opt_spec_tree(kind, opt_shape, p_specs)}
+        batch_specs = specs
+        batch_spec_tree = {
+            k: P(dp, *([None] * (v.ndim - 1))) for k, v in specs.items()
+        }
+        L = cfg.n_layers
+
+        def step(state, batch):
+            def loss_fn(params):
+                hop_feats = [batch[f"hop{j}_feats"] for j in range(L + 1)]
+                hop_masks = [None] + [batch[f"hop{j}_mask"] for j in range(1, L + 1)]
+                logits = gnn_lib.apply_minibatch(params, hop_feats, hop_masks, cfg)
+                return gnn_lib.softmax_ce(logits, batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            params, opt_state = opt.update(state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    else:  # batched small graphs (molecule)
+        G = shape.get("batch", 128) if mesh else 8
+        n, e = shape["n_nodes"], shape["n_edges"]
+        if mesh is None:
+            n, e = 6, 10
+        specs = gnn_lib.input_specs(cfg, {"batch": G, "n_nodes": n, "n_edges": e})
+        params_shape = jax.eval_shape(lambda: gnn_lib.init(jax.random.PRNGKey(0), cfg))
+        p_specs = param_spec_tree(kind, params_shape)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_specs = {"params": params_shape, "opt": opt_shape}
+        state_spec_tree = {"params": p_specs,
+                           "opt": opt_spec_tree(kind, opt_shape, p_specs)}
+        batch_specs = specs
+        # graphs are independent: shard every packed array on its graph-major
+        # leading dim; the per-graph shard_map keeps segment ids local.
+        batch_spec_tree = {
+            "feats": P(dp, None),
+            "edges": P(None, dp),
+            "node_mask": P(dp),
+            "graph_ids": P(dp),
+            "labels": P(dp),
+        }
+        the_mesh = mesh
+
+        def step(state, batch):
+            def loss_fn(params):
+                if the_mesh is not None:
+                    from repro.dist.gnn import apply_batched_sharded
+
+                    logits, labels = apply_batched_sharded(
+                        params, batch, cfg, the_mesh, dp, G, n, e,
+                    )
+                    return gnn_lib.softmax_ce(logits, labels)
+                logits = gnn_lib.apply_batched(
+                    params, batch["feats"], batch["edges"], batch["node_mask"],
+                    batch["graph_ids"], G, cfg,
+                )
+                return gnn_lib.softmax_ce(logits, batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            params, opt_state = opt.update(state["params"], grads, state["opt"])
+            return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    def init_state(key):
+        params = gnn_lib.init(key, cfg)
+        return {"params": params, "opt": opt.init(params)}
+
+    return CellProgram(
+        arch_id=arch.ARCH_ID, shape=shape, kind=kind, cfg=cfg, step_fn=step,
+        state_specs=state_specs, batch_specs=batch_specs,
+        state_shardings=_shardings_from_specs(mesh, state_spec_tree) if mesh else None,
+        batch_shardings=_shardings_from_specs(mesh, batch_spec_tree) if mesh else None,
+        mesh=mesh, multi_pod=multi_pod, donate_state=True,
+        init_state=init_state,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh=None,
+               multi_pod: bool = False, cfg_override=None) -> CellProgram:
+    arch = get_arch(arch_id)
+    shape = next(s for s in arch.SHAPES if s.name == shape_name)
+    if cfg_override is not None:
+        # used by the roofline scan-correction (n_layers=1/2 lowering)
+        import types
+
+        arch = types.SimpleNamespace(
+            ARCH_ID=arch.ARCH_ID, KIND=arch.KIND, SHAPES=arch.SHAPES,
+            FULL=cfg_override, SMOKE=getattr(arch, "SMOKE", None),
+            SHAPE_CONFIGS=getattr(arch, "SHAPE_CONFIGS", None),
+        )
+    if arch.KIND in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        return _lm_cell(arch, shape, mesh, multi_pod)
+    if arch.KIND == ArchKind.RECSYS:
+        return _recsys_cell(arch, shape, mesh, multi_pod)
+    return _gnn_cell(arch, shape, mesh, multi_pod)
+
+
+def run_cell(cell: CellProgram, fn):
+    """Run `fn` under the cell's mesh + logical axis rules (no-op without)."""
+    if cell.mesh is None:
+        return fn()
+    rules = logical_rules(cell.kind, cell.multi_pod)
+    with logical.axis_rules(cell.mesh, rules):
+        return fn()

@@ -1,0 +1,1 @@
+"""Model zoo: recsys (DLRM/WnD/DIN/DIEN/MIND), LM transformers, GraphSAGE."""

@@ -1,0 +1,331 @@
+"""Embedding substrate: EmbeddingBag / SparseLengthsSum in pure JAX.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the multi-hot
+gather+pool that dominates recommendation inference (the paper's SparseNet)
+is built here from ``jnp.take`` + masked reduction / ``jax.ops.segment_sum``.
+This module is single-device semantics; the distributed (model-axis sharded)
+lookup lives in ``repro.dist.sharded_embedding`` and the fused TPU kernel in
+``repro.kernels.embedding_bag``.
+
+Layout: all feature tables are concatenated row-wise into ONE combined
+``[total_rows, dim]`` array (FBGEMM table-batched-embedding style); feature
+``f``'s ids are shifted by ``row_offsets[f]``. This gives a single gather for
+the whole SparseNet and a single row-sharded array for the model axis.
+
+Hot/cold split (paper §IV-B, locality-aware partition): ids are assumed
+frequency-ranked per table (the synthetic data generator produces them that
+way), so "row < hot_rows[f]" identifies the hot set. ``split_hot_cold``
+re-lays the combined table into a small hot replica + a cold remainder, and
+``embedding_bag_hot_cold`` computes hot and cold partial sums separately —
+the Psum dataflow of the paper's Figure 10(d).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.init import embedding_init
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    """Combined multi-table embedding-bag configuration.
+
+    vocab_sizes: rows per sparse feature table.
+    dim: shared embedding dimension.
+    pooling: max multi-hot pooling factor per feature (ids padded with -1).
+    combine: "sum" (SparseLengthsSum) or "mean".
+    qr_features: features using the quotient-remainder trick (huge vocabs);
+        their storage is ``ceil(V/qr_buckets) + qr_buckets`` rows instead of V.
+    """
+
+    vocab_sizes: tuple[int, ...]
+    dim: int
+    pooling: tuple[int, ...]
+    combine: str = "sum"
+    qr_features: tuple[int, ...] = ()
+    qr_buckets: int = 65536
+    dtype: Any = jnp.float32
+    # combined table rows are padded to a multiple of this so the row-wise
+    # model-axis shard is always even (512 covers every production mesh).
+    row_pad: int = 512
+
+    def __post_init__(self):
+        if len(self.vocab_sizes) != len(self.pooling):
+            raise ValueError("vocab_sizes and pooling must have equal length")
+        if self.combine not in ("sum", "mean"):
+            raise ValueError(f"unknown combine mode {self.combine!r}")
+
+    @property
+    def num_features(self) -> int:
+        return len(self.vocab_sizes)
+
+    def storage_rows(self, f: int) -> int:
+        """Physical rows stored for feature f (QR-compressed if enabled)."""
+        v = self.vocab_sizes[f]
+        if f in self.qr_features:
+            q = -(-v // self.qr_buckets)  # ceil
+            return q + self.qr_buckets
+        return v
+
+    @property
+    def row_offsets(self) -> np.ndarray:
+        """Start row of each feature in the combined table; len = F+1."""
+        sizes = [self.storage_rows(f) for f in range(self.num_features)]
+        return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+    @property
+    def total_rows(self) -> int:
+        raw = int(self.row_offsets[-1])
+        return -(-raw // self.row_pad) * self.row_pad
+
+    @property
+    def max_pooling(self) -> int:
+        return max(self.pooling)
+
+    def bytes(self, dtype_bytes: int = 4) -> int:
+        return self.total_rows * self.dim * dtype_bytes
+
+
+def init_embedding(key, cfg: EmbeddingConfig):
+    """One combined [total_rows, dim] table, DLRM uniform init per table."""
+    # Init the whole combined table in one draw with a per-table scale:
+    # equivalent in distribution to per-table U(-1/sqrt(V), 1/sqrt(V)).
+    table = jax.random.uniform(
+        key, (cfg.total_rows, cfg.dim), minval=-1.0, maxval=1.0, dtype=jnp.float32
+    )
+    offsets = cfg.row_offsets
+    scales = np.ones((cfg.total_rows, 1), np.float32)
+    for f in range(cfg.num_features):
+        v = cfg.vocab_sizes[f]
+        scales[offsets[f] : offsets[f + 1]] = 1.0 / np.sqrt(v)
+    return {"table": (table * jnp.asarray(scales)).astype(cfg.dtype)}
+
+
+def _feature_row_index(cfg: EmbeddingConfig, ids: jax.Array) -> jax.Array:
+    """Map per-feature logical ids [B, F, P] to combined physical row ids.
+
+    Padding ids (< 0) map to row 0 (they are masked out of the pool anyway).
+    For QR features each logical id expands *virtually*: we fold quotient and
+    remainder into two gathers handled by ``embedding_bag`` directly, so here
+    plain features only; QR handled in the caller.
+    """
+    offsets = jnp.asarray(cfg.row_offsets[:-1], jnp.int32)  # [F]
+    safe = jnp.maximum(ids, 0)
+    return safe + offsets[None, :, None]
+
+
+def embedding_bag(params, ids: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
+    """Multi-hot gather + pool. ids: [B, F, Pmax] int32, -1-padded.
+
+    Returns pooled embeddings [B, F, dim]. Under a mesh context the lookup
+    routes through the model-axis-sharded Psum dataflow
+    (repro.dist.sharded_embedding); single-device semantics otherwise.
+    """
+    from repro.dist import logical
+
+    if logical.model_axis_name() is not None:
+        from repro.dist.sharded_embedding import embedding_bag_sharded
+
+        return embedding_bag_sharded(params, ids, cfg)
+    return embedding_bag_local(params, ids, cfg)
+
+
+def embedding_bag_local(params, ids: jax.Array, cfg: EmbeddingConfig) -> jax.Array:
+    """Single-shard EmbeddingBag (jnp.take + masked pool)."""
+    table = params["table"]
+    B, F, P = ids.shape
+    if F != cfg.num_features:
+        raise ValueError(f"expected {cfg.num_features} features, got {F}")
+    mask = (ids >= 0).astype(table.dtype)[..., None]  # [B, F, P, 1]
+
+    if not cfg.qr_features:
+        rows = jnp.take(
+            table, _feature_row_index(cfg, ids).reshape(-1), axis=0
+        ).reshape(B, F, P, cfg.dim)
+    else:
+        rows = _gather_with_qr(table, ids, cfg)
+
+    pooled = (rows * mask).sum(axis=2)  # [B, F, dim]
+    if cfg.combine == "mean":
+        counts = jnp.maximum(mask.sum(axis=2), 1.0)
+        pooled = pooled / counts
+    return pooled
+
+
+def _gather_with_qr(table, ids, cfg: EmbeddingConfig):
+    """Gather rows where some features use quotient-remainder compression.
+
+    QR feature f of vocab V stores ``q = ceil(V/Q)`` quotient rows followed by
+    ``Q`` remainder rows; emb(id) = quot[id // Q] * rem[id % Q] (Hadamard,
+    per the QR-embedding paper's best-performing combiner).
+    """
+    B, F, P = ids.shape
+    offsets = cfg.row_offsets
+    safe = jnp.maximum(ids, 0)
+    per_feature = []
+    for f in range(cfg.num_features):
+        fid = safe[:, f, :]  # [B, P]
+        base = int(offsets[f])
+        if f in cfg.qr_features:
+            q_rows = -(-cfg.vocab_sizes[f] // cfg.qr_buckets)
+            quot = jnp.take(table, base + fid // cfg.qr_buckets, axis=0)
+            rem = jnp.take(table, base + q_rows + fid % cfg.qr_buckets, axis=0)
+            per_feature.append(quot * rem)
+        else:
+            per_feature.append(jnp.take(table, base + fid, axis=0))
+    return jnp.stack(per_feature, axis=1)  # [B, F, P, dim]
+
+
+def embedding_bag_ragged(
+    table: jax.Array,
+    ids: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    combine: str = "sum",
+) -> jax.Array:
+    """Ragged EmbeddingBag: flat ids + segment ids -> [num_segments, dim].
+
+    This is the ``jnp.take`` + ``jax.ops.segment_sum`` form used where bags
+    are genuinely variable-length (GNN aggregation, ragged serving path).
+    """
+    rows = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combine == "mean":
+        ones = jnp.ones((ids.shape[0], 1), dtype=rows.dtype)
+        counts = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(counts, 1.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hot/cold locality-aware partition (paper §IV-B, Figure 10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HotColdLayout:
+    """Physical layout after locality-aware partition.
+
+    hot_rows[f]: number of hottest rows of feature f replicated in the hot
+    table (``G_s.hot``); the remainder stays in the sharded cold table
+    (``G_s``). Row offsets are recomputed for both tables.
+    """
+
+    cfg: EmbeddingConfig
+    hot_rows: tuple[int, ...]
+
+    @property
+    def hot_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.hot_rows)]).astype(np.int64)
+
+    @property
+    def cold_rows(self) -> tuple[int, ...]:
+        return tuple(
+            self.cfg.storage_rows(f) - self.hot_rows[f]
+            for f in range(self.cfg.num_features)
+        )
+
+    @property
+    def cold_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.cold_rows)]).astype(np.int64)
+
+    @property
+    def total_hot(self) -> int:
+        return int(self.hot_offsets[-1])
+
+    @property
+    def total_cold(self) -> int:
+        return int(self.cold_offsets[-1])
+
+
+def make_hot_cold_layout(
+    cfg: EmbeddingConfig, capacity_rows: int, access_freq: Sequence[np.ndarray] | None = None
+) -> HotColdLayout:
+    """Size the hot set under a row-capacity budget (memory capacity /
+    co-location degree, per the paper).
+
+    With frequency-ranked ids, the optimal hot set under a shared budget fills
+    tables proportionally to their access mass; ``access_freq`` (per-feature
+    access counts, optional) weights the split, else pooling factors are used
+    as the access-mass proxy (a table looked up P times per query is P times
+    hotter).
+    """
+    F = cfg.num_features
+    if access_freq is not None:
+        mass = np.array([float(np.sum(a)) for a in access_freq], np.float64)
+    else:
+        mass = np.array(cfg.pooling, np.float64)
+    mass = mass / mass.sum()
+    hot = [
+        int(min(cfg.storage_rows(f), np.floor(mass[f] * capacity_rows)))
+        for f in range(F)
+    ]
+    return HotColdLayout(cfg=cfg, hot_rows=tuple(hot))
+
+
+def split_hot_cold(params, layout: HotColdLayout):
+    """Re-lay the combined table into {hot, cold} per the layout."""
+    cfg = layout.cfg
+    table = params["table"]
+    hots, colds = [], []
+    off = cfg.row_offsets
+    for f in range(cfg.num_features):
+        t = table[int(off[f]) : int(off[f + 1])]
+        hots.append(t[: layout.hot_rows[f]])
+        colds.append(t[layout.hot_rows[f] :])
+    return {
+        "hot": jnp.concatenate(hots, axis=0) if layout.total_hot else jnp.zeros((0, cfg.dim), table.dtype),
+        "cold": jnp.concatenate(colds, axis=0),
+    }
+
+
+def embedding_bag_hot_cold(
+    split_params, ids: jax.Array, layout: HotColdLayout
+) -> tuple[jax.Array, jax.Array]:
+    """Pooled lookup returning separate (hot_psum, cold_psum), each [B, F, D].
+
+    The caller adds them; keeping them separate mirrors the paper's pipeline
+    where the hot partial sum is produced on the accelerator and the cold
+    partial sum (Psum) arrives from the host/sharded side.
+    """
+    cfg = layout.cfg
+    B, F, P = ids.shape
+    hot_rows = jnp.asarray(layout.hot_rows, jnp.int32)[None, :, None]
+    hot_off = jnp.asarray(layout.hot_offsets[:-1], jnp.int32)[None, :, None]
+    cold_off = jnp.asarray(layout.cold_offsets[:-1], jnp.int32)[None, :, None]
+
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    is_hot = valid & (safe < hot_rows)
+    is_cold = valid & ~(safe < hot_rows)
+
+    # masked slots index row 0 of the right table; clip because fully-hot
+    # (or fully-cold) features leave the other table's offset out of range
+    # (jnp.take's default OOB mode is 'fill' = NaN).
+    n_hot = max(layout.total_hot, 1)
+    n_cold = max(layout.total_cold, 1)
+    hot_idx = jnp.clip(jnp.where(is_hot, safe, 0) + hot_off, 0, n_hot - 1)
+    cold_idx = jnp.clip(jnp.where(is_cold, safe - hot_rows, 0) + cold_off, 0,
+                        n_cold - 1)
+
+    dim = cfg.dim
+    if layout.total_hot:
+        hot_rows_g = jnp.take(split_params["hot"], hot_idx.reshape(-1), axis=0)
+        hot_psum = (
+            hot_rows_g.reshape(B, F, P, dim)
+            * is_hot[..., None].astype(hot_rows_g.dtype)
+        ).sum(axis=2)
+    else:
+        hot_psum = jnp.zeros((B, F, dim), split_params["cold"].dtype)
+
+    cold_rows_g = jnp.take(split_params["cold"], cold_idx.reshape(-1), axis=0)
+    cold_psum = (
+        cold_rows_g.reshape(B, F, P, dim)
+        * is_cold[..., None].astype(cold_rows_g.dtype)
+    ).sum(axis=2)
+    return hot_psum, cold_psum

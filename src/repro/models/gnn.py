@@ -1,0 +1,189 @@
+"""GraphSAGE (arXiv:1706.02216) — mean aggregator, 2 layers.
+
+JAX has no sparse message-passing; aggregation is built from gather +
+``jax.ops.segment_sum`` over an edge list (src -> dst), per the kernel
+taxonomy §GNN. Three execution modes cover the assigned shapes:
+
+- full   : full-graph training (cora / ogb_products scales) over an edge
+           list [2, E]; distributed by sharding edges and psum-ing partial
+           aggregations (repro.dist.gnn).
+- mini   : layer-wise sampled mini-batch (reddit) with *fixed fanout* —
+           dense [B, f1, f2] id blocks from the real neighbor sampler in
+           repro.data.graph; aggregation is a masked mean over the fanout
+           axis (no segment ops needed — static shapes by construction).
+- batched: many small graphs (molecule) packed block-diagonally; per-graph
+           readout via segment_sum over graph ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.init import xavier_init
+from repro.dist import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    d_feat: int
+    d_hidden: int = 128
+    n_layers: int = 2
+    n_classes: int = 41
+    aggregator: str = "mean"
+    fanout: tuple[int, ...] = (25, 10)
+    mode: str = "full"  # full | mini | batched
+    readout: str = "node"  # node | graph
+    dtype: Any = jnp.float32
+
+
+def init(key, cfg: GNNConfig):
+    keys = jax.random.split(key, cfg.n_layers * 2 + 1)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "w_self": xavier_init(keys[2 * i], (d_in, cfg.d_hidden), dtype=cfg.dtype),
+                "w_neigh": xavier_init(keys[2 * i + 1], (d_in, cfg.d_hidden), dtype=cfg.dtype),
+                "b": jnp.zeros((cfg.d_hidden,), cfg.dtype),
+            }
+        )
+        d_in = cfg.d_hidden
+    return {
+        "layers": layers,
+        "cls": xavier_init(keys[-1], (cfg.d_hidden, cfg.n_classes), dtype=cfg.dtype),
+    }
+
+
+def _degree(dst, n_nodes, dtype):
+    ones = jnp.ones_like(dst, dtype=dtype)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+    return jnp.maximum(deg, 1.0)[:, None]
+
+
+def aggregate_full(h, edges, n_nodes, aggregator="mean"):
+    """Gather-scatter aggregation over an edge list. edges: [2, E]."""
+    src, dst = edges[0], edges[1]
+    msg = jnp.take(h, src, axis=0)  # [E, d]
+    if aggregator == "max":
+        agg = jax.ops.segment_max(msg, dst, num_segments=n_nodes)
+        return jnp.where(jnp.isfinite(agg), agg, 0.0)
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    if aggregator == "mean":
+        agg = agg / _degree(dst, n_nodes, h.dtype)
+    return agg
+
+
+def _sage_combine(layer, h_self, h_agg, activate=True):
+    out = h_self @ layer["w_self"] + h_agg @ layer["w_neigh"] + layer["b"]
+    return jax.nn.relu(out) if activate else out
+
+
+def apply_full(params, feats, edges, cfg: GNNConfig):
+    """Full-graph forward: feats [N, d_feat], edges [2, E] -> logits [N, C]."""
+    n_nodes = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for i, layer in enumerate(params["layers"]):
+        agg = aggregate_full(h, edges, n_nodes, cfg.aggregator)
+        h = _sage_combine(layer, h, agg, activate=True)
+        h = logical.constrain(h, ("nodes", None))
+    return h @ params["cls"]
+
+
+def apply_minibatch(params, hop_feats, hop_masks, cfg: GNNConfig):
+    """Sampled mini-batch forward with fixed fanout.
+
+    hop_feats: list of L+1 arrays — hop_feats[j] has shape
+      [B, f1, ..., fj, d_feat] (features of the j-hop frontier).
+    hop_masks: matching validity masks [B, f1, ..., fj] (True = real edge).
+    Layer i aggregates hop j=i+1 into hop j, shrinking the pyramid until
+    only the seeds [B, d_hidden] remain. Returns logits [B, C].
+    """
+    L = cfg.n_layers
+    h = [f.astype(cfg.dtype) for f in hop_feats]
+    for i, layer in enumerate(params["layers"]):
+        nxt = []
+        for j in range(L - i):
+            m = hop_masks[j + 1][..., None].astype(h[0].dtype)
+            if cfg.aggregator == "max":
+                neg = jnp.asarray(-1e30, h[0].dtype)
+                agg = jnp.where(m > 0, h[j + 1], neg).max(axis=-2)
+                agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+            else:
+                s = (h[j + 1] * m).sum(axis=-2)
+                if cfg.aggregator == "mean":
+                    s = s / jnp.maximum(m.sum(axis=-2), 1.0)
+                agg = s
+            nxt.append(_sage_combine(layer, h[j], agg, activate=True))
+        h = nxt
+    return h[0] @ params["cls"]
+
+
+def apply_batched(params, feats, edges, node_mask, graph_ids, n_graphs, cfg: GNNConfig):
+    """Packed small graphs: feats [Nt, d], edges [2, Et] (block-diagonal),
+    graph_ids [Nt] -> graph logits [G, C] via mean readout."""
+    n_nodes = feats.shape[0]
+    h = feats.astype(cfg.dtype)
+    for layer in params["layers"]:
+        agg = aggregate_full(h, edges, n_nodes, cfg.aggregator)
+        h = _sage_combine(layer, h, agg, activate=True)
+    h = h * node_mask[:, None].astype(h.dtype)
+    summed = jax.ops.segment_sum(h, graph_ids, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(
+        node_mask.astype(h.dtype), graph_ids, num_segments=n_graphs
+    )
+    pooled = summed / jnp.maximum(counts, 1.0)[:, None]
+    return pooled @ params["cls"]
+
+
+def softmax_ce(logits, labels, mask=None):
+    """Cross-entropy with integer labels; mask selects supervised rows."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (loss * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return loss.mean()
+
+
+def input_specs(cfg: GNNConfig, shape_dims: dict):
+    """ShapeDtypeStruct stand-ins per GNN shape cell."""
+    d = shape_dims
+    if cfg.mode == "full":
+        n, e = d["n_nodes"], d["n_edges"]
+        return {
+            "feats": jax.ShapeDtypeStruct((n, cfg.d_feat), cfg.dtype),
+            "edges": jax.ShapeDtypeStruct((2, e), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((n,), jnp.int32),
+            "label_mask": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        }
+    if cfg.mode == "mini":
+        B = d["batch_nodes"]
+        fan = d.get("fanout", cfg.fanout)
+        specs = {}
+        shape = (B,)
+        for j in range(cfg.n_layers + 1):
+            specs[f"hop{j}_feats"] = jax.ShapeDtypeStruct((*shape, cfg.d_feat), cfg.dtype)
+            if j > 0:
+                specs[f"hop{j}_mask"] = jax.ShapeDtypeStruct(shape, jnp.bool_)
+            if j < cfg.n_layers:
+                shape = (*shape, fan[j])
+        specs["labels"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return specs
+    if cfg.mode == "batched":
+        G, n, e = d["batch"], d["n_nodes"], d["n_edges"]
+        Nt, Et = G * n, G * e
+        return {
+            "feats": jax.ShapeDtypeStruct((Nt, cfg.d_feat), cfg.dtype),
+            "edges": jax.ShapeDtypeStruct((2, Et), jnp.int32),
+            "node_mask": jax.ShapeDtypeStruct((Nt,), jnp.bool_),
+            "graph_ids": jax.ShapeDtypeStruct((Nt,), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((G,), jnp.int32),
+        }
+    raise ValueError(f"unknown mode {cfg.mode}")

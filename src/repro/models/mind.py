@@ -1,0 +1,80 @@
+"""MIND — Multi-Interest Network with Dynamic routing (arXiv:1904.08030).
+
+History item embeddings are routed into K interest capsules via B2I dynamic
+routing (behaviour-to-interest); serving scores a candidate item against the
+max-activated interest (label-aware attention with pow -> hard max at
+serving, per the paper). The retrieval_cand shape scores one user's K
+interests against ~1e6 candidate items with a single [K, D] @ [D, N] matmul —
+batched-dot, never a loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.init import normal_init
+from repro.models import embedding as emb_lib
+from repro.models.layers import apply_mlp, init_mlp
+from repro.models.recsys_base import RecsysConfig
+
+
+def _item_lookup(params, ids, cfg: RecsysConfig):
+    from repro.dist.sharded_embedding import sharded_row_gather
+
+    base = int(cfg.embedding.row_offsets[0])
+    return sharded_row_gather(
+        params["embedding"]["table"], base + jnp.maximum(ids, 0), None)
+
+
+def init(key, cfg: RecsysConfig):
+    k_emb, k_s, k_mlp = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "embedding": emb_lib.init_embedding(k_emb, cfg.embedding),
+        # shared bilinear routing map S (B2I routing uses one shared S)
+        "S": normal_init(k_s, (d, d), stddev=0.05, dtype=cfg.dtype),
+        # per-interest projection head (paper: H-layer FC after capsules)
+        "head": init_mlp(k_mlp, (d, 2 * d, d), dtype=cfg.dtype),
+    }
+
+
+def squash(x, axis=-1, eps=1e-9):
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + eps)
+
+
+def interest_capsules(params, history_ids, cfg: RecsysConfig) -> jax.Array:
+    """[B, T] history -> [B, K, D] interest capsules via dynamic routing."""
+    mask = history_ids >= 0                              # [B, T]
+    e = _item_lookup(params, history_ids, cfg)           # [B, T, D]
+    e = e * mask[..., None].astype(e.dtype)
+    u = e @ params["S"]                                  # behaviour -> routing space
+    B, T, D = u.shape
+    K = cfg.n_interests
+    # Routing logits b are fixed (non-trainable) and start at zero; iterate.
+    b = jnp.zeros((B, T, K), u.dtype)
+    neg = jnp.asarray(-1e30, u.dtype)
+    caps = jnp.zeros((B, K, D), u.dtype)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(jnp.where(mask[..., None], b, neg), axis=1)  # over T
+        caps = squash(jnp.einsum("btk,btd->bkd", w, u))
+        b = b + jnp.einsum("bkd,btd->btk", caps, u)
+    # per-interest head MLP (applied per capsule)
+    caps = apply_mlp(params["head"], caps.reshape(B * K, D)).reshape(B, K, D)
+    return caps
+
+
+def apply(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """Ranking form: score one target per user -> [B] logits."""
+    caps = interest_capsules(params, batch["history_ids"], cfg)   # [B, K, D]
+    target = _item_lookup(params, batch["target_id"], cfg)        # [B, D]
+    scores = jnp.einsum("bkd,bd->bk", caps, target)
+    return scores.max(axis=-1)  # label-aware hard attention at serving
+
+
+def retrieval_scores(params, batch, candidate_ids, cfg: RecsysConfig) -> jax.Array:
+    """Retrieval form: [B] users x [N] candidates -> [B, N] scores."""
+    caps = interest_capsules(params, batch["history_ids"], cfg)   # [B, K, D]
+    cand = _item_lookup(params, candidate_ids, cfg)               # [N, D]
+    scores = jnp.einsum("bkd,nd->bkn", caps, cand)
+    return scores.max(axis=1)                                     # [B, N]

@@ -1,0 +1,421 @@
+"""LM transformer family: dense (qwen2/llama3/deepseek-67b) and MoE
+(qwen2-moe, olmoe) decoder-only models.
+
+Structure is MaxText-style for compile efficiency at depth: per-layer params
+are stacked on a leading L axis and the forward pass is a ``lax.scan`` over
+layers (O(1) HLO size — deepseek-67b's 95 layers compile as one block), with
+``jax.checkpoint`` remat inside the scan for training.
+
+Sharding is annotated with *logical* axes (repro.dist.logical): "batch",
+"seq", "embed", "heads", "kv_heads", "ffn", "vocab", "expert". The launcher
+binds them to mesh axes; single-device tests run the same code un-annotated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.init import normal_init
+from repro.dist import logical
+from repro.dist.moe import moe_apply
+from repro.models.layers import (
+    AttentionConfig,
+    MoEConfig,
+    apply_rmsnorm,
+    apply_rope,
+    apply_swiglu,
+    attention_output,
+    init_attention,
+    init_rmsnorm,
+    init_swiglu,
+    qkv_projection,
+    rope_angles,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    remat: bool = True
+    # unroll the layer loop instead of lax.scan — used by the roofline
+    # correction (XLA cost_analysis counts a while body once, regardless of
+    # trip count; unrolled 1- vs 2-layer lowering recovers the true
+    # per-layer cost). Production configs keep scan for O(1) HLO size.
+    unroll_layers: bool = False
+    # attention schedule: "naive" materializes [Tq, Tk] scores (baseline);
+    # "chunked" is the flash-style online-softmax scan over KV chunks —
+    # the XLA-level analogue of kernels/flash_attention (§Perf iteration).
+    attn_impl: str = "naive"
+    attn_chunk: int = 1024
+    # sequence-shard the residual stream over the model axis between blocks
+    # (Megatron-SP): converts the TP activation all-reduces into
+    # reduce-scatter/all-gather pairs and stores activations 1/TP-sized.
+    seq_shard: bool = False
+    # KV-cache quantization (KIVI-style per-token-per-head int8): halves the
+    # cache residency -> 2x decode batch per chip (§Perf iteration).
+    kv_quant: str = "none"  # "none" | "int8"
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def attn(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta,
+        )
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS = 6·N·D accounting)."""
+        return sum(
+            int(np.prod(x.shape))
+            for x in jax.tree.leaves(
+                jax.eval_shape(lambda: init(jax.random.PRNGKey(0), self))
+            )
+        )
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        per_expert = 3 * self.d_model * m.d_ff
+        inactive = (m.n_experts - m.top_k) * per_expert * self.n_layers
+        return total - inactive
+
+
+def _init_block(key, cfg: LMConfig):
+    k_attn, k_ffn = jax.random.split(key)
+    block = {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.dtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": init_attention(k_attn, cfg.attn, dtype=cfg.dtype),
+    }
+    if cfg.moe is not None:
+        from repro.models.layers import init_moe
+
+        block["ffn"] = init_moe(k_ffn, cfg.moe, dtype=cfg.dtype)
+    else:
+        block["ffn"] = init_swiglu(k_ffn, cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    return block
+
+
+def init(key, cfg: LMConfig):
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": normal_init(k_emb, (cfg.vocab, cfg.d_model), dtype=cfg.dtype),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.vocab), dtype=cfg.dtype)
+    return params
+
+
+def _block_apply(params_l, x, cos, sin, cfg: LMConfig, cache_l=None, pos=None):
+    """One transformer block. cache_l: {"k","v"} [B, S, KVH, hd] or None.
+
+    Returns (x, new_cache_l, aux_loss).
+    """
+    B, T, _ = x.shape
+    h = apply_rmsnorm(params_l["ln1"], x)
+    q, k, v = qkv_projection(params_l["attn"], h, cfg.attn)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = logical.constrain(q, ("batch", "seq", "heads", None))
+
+    # chunked (flash-style) attention wins for Tq > 1 (train/prefill) but
+    # loses badly for seq-sharded decode (measured: the per-chunk scan
+    # forces GSPMD to gather every chunk) -> single-block path for Tq == 1.
+    use_chunked = cfg.attn_impl == "chunked" and T > 1
+    if use_chunked:
+        attn_fn = functools.partial(_attention_chunked,
+                                    unroll=cfg.unroll_layers)
+    else:
+        attn_fn = _attention
+    new_cache_l = None
+    if cache_l is not None:
+        if cfg.kv_quant == "int8":
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache_l = {
+                "k": jax.lax.dynamic_update_slice(cache_l["k"], kq, (0, pos, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache_l["v"], vq, (0, pos, 0, 0)),
+                "ks": jax.lax.dynamic_update_slice(cache_l["ks"], ks, (0, pos, 0, 0)),
+                "vs": jax.lax.dynamic_update_slice(cache_l["vs"], vs, (0, pos, 0, 0)),
+            }
+            kc = new_cache_l["k"].astype(x.dtype) * new_cache_l["ks"].astype(x.dtype)
+            vc = new_cache_l["v"].astype(x.dtype) * new_cache_l["vs"].astype(x.dtype)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache_l["k"], k, (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache_l["v"], v, (0, pos, 0, 0))
+            new_cache_l = {"k": kc, "v": vc}
+        attn = attn_fn(q, kc, vc, q_offset=pos, chunk=cfg.attn_chunk)
+    else:
+        attn = attn_fn(q, k, v, q_offset=0, chunk=cfg.attn_chunk)
+    x = x + logical.constrain(
+        attention_output(params_l["attn"], attn), ("batch", "residual_seq", "embed"))
+
+    h2 = apply_rmsnorm(params_l["ln2"], x)
+    if cfg.moe is not None:
+        flat = h2.reshape(B * T, cfg.d_model)
+        out, aux = moe_apply(params_l["ffn"], flat, cfg.moe)
+        ffn_out = out.reshape(B, T, cfg.d_model)
+    else:
+        ffn_out = apply_swiglu(params_l["ffn"], h2)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + logical.constrain(ffn_out, ("batch", "residual_seq", "embed"))
+    return x, new_cache_l, aux
+
+
+def _attention(q, k, v, *, q_offset, chunk=None):
+    """Causal GQA attention with a query-position offset (for KV caches).
+
+    q: [B, Tq, H, hd]; k/v: [B, Tk, KVH, hd]. Query i's global position is
+    q_offset + i; it attends to kv positions j <= q_offset + i.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+    qg = q.reshape(B, Tq, KVH, group, hd)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k) * scale
+    jpos = jnp.arange(Tk)[None, :]
+    ipos = jnp.arange(Tq)[:, None] + q_offset
+    mask = jpos <= ipos
+    logits = jnp.where(mask[None, None, None], logits, jnp.asarray(-1e30, logits.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    return out.reshape(B, Tq, H, hd)
+
+
+NEG_INF = -1e30
+
+
+def _attention_chunked(q, k, v, *, q_offset, chunk=1024, unroll=False):
+    """Flash-style online-softmax attention as a lax.scan over KV chunks.
+
+    Never materializes the [Tq, Tk] score matrix — per-step intermediates
+    are [B, KVH, g, Tq, chunk] — which is what moves the memory roofline
+    term for the long-sequence cells; the Pallas kernel
+    (kernels/flash_attention) is the on-chip realization of the same
+    schedule.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KVH = k.shape[1], k.shape[2]
+    chunk = min(chunk, Tk)
+    if Tk % chunk:
+        raise ValueError(f"Tk {Tk} % chunk {chunk} != 0")
+    n_chunks = Tk // chunk
+    group = H // KVH
+    qg = q.reshape(B, Tq, KVH, group, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    kc = k.reshape(B, n_chunks, chunk, KVH, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KVH, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = (q_offset + jnp.arange(Tq))[:, None]  # [Tq, 1]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, idx = inp
+        s = jnp.einsum("btkgh,bskh->bkgts", qg, k_i).astype(jnp.float32) * scale
+        kpos = idx * chunk + jnp.arange(chunk)[None, :]
+        mask = kpos <= qpos                       # [Tq, chunk]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgts,bskh->bkgth", p.astype(q.dtype), v_i)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KVH, group, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, group, Tq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, group, Tq, hd), q.dtype)
+    if unroll:  # roofline-correction lowering: scan bodies count once in
+        # cost_analysis, so the correction pass unrolls the chunk loop too
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i], jnp.asarray(i)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+        )
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    # [B, KVH, g, Tq, hd] -> [B, Tq, H, hd]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, hd)
+
+
+def _embed_tokens(params, tokens, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        # tied table is VOCAB-sharded (so the logits matmul needs no psum);
+        # the token gather goes through the masked-local-gather + psum path.
+        from repro.dist.sharded_embedding import sharded_row_gather
+
+        x = sharded_row_gather(params["embed"], tokens, None)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    return logical.constrain(x, ("batch", "seq", "embed"))
+
+
+def _lm_logits(params, x, cfg: LMConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logical.constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, tokens, cfg: LMConfig, *, cache=None, pos=None):
+    """tokens [B, T] -> (logits [B, T, V], new_cache, aux_loss).
+
+    cache: stacked {"k","v"} [L, B, S, KVH, hd] + scalar ``pos`` write
+    offset, or None for plain training forward.
+    """
+    B, T = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    pos0 = 0 if pos is None else pos
+    positions = pos0 + jnp.arange(T)
+    cos, sin = rope_angles(positions[None, :], cfg.head_dim, cfg.rope_theta)
+    cos, sin = jnp.broadcast_to(cos, (B, T, cfg.head_dim // 2)), jnp.broadcast_to(
+        sin, (B, T, cfg.head_dim // 2)
+    )
+
+    if cache is None:
+
+        def body(carry, params_l):
+            h, aux = carry
+            h, _, aux_l = _block_apply(params_l, h, cos, sin, cfg)
+            return (h, aux + aux_l), None
+
+        step = jax.checkpoint(body) if cfg.remat else body
+        if cfg.unroll_layers:
+            carry = (x, jnp.zeros((), jnp.float32))
+            for i in range(cfg.n_layers):
+                carry, _ = step(carry, jax.tree.map(lambda t: t[i], params["blocks"]))
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                       params["blocks"])
+        new_cache = None
+    else:
+
+        def body_c(carry, layer_in):
+            h, aux = carry
+            params_l, cache_l = layer_in
+            h, new_cache_l, aux_l = _block_apply(
+                params_l, h, cos, sin, cfg, cache_l=cache_l, pos=pos0
+            )
+            return (h, aux + aux_l), new_cache_l
+
+        if cfg.unroll_layers:
+            carry = (x, jnp.zeros((), jnp.float32))
+            caches = []
+            for i in range(cfg.n_layers):
+                layer_in = jax.tree.map(lambda t: t[i], (params["blocks"], cache))
+                carry, c_l = body_c(carry, layer_in)
+                caches.append(c_l)
+            x, aux = carry
+            new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+        else:
+            (x, aux), new_cache = jax.lax.scan(
+                body_c, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache)
+            )
+
+    x = apply_rmsnorm(params["final_norm"], x)
+    logits = _lm_logits(params, x, cfg)
+    return logits, new_cache, aux
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """Next-token cross-entropy. batch: {"tokens": [B, T]} (shift internally).
+
+    Loss over positions 0..T-2 predicting 1..T-1, mean per token; MoE aux
+    loss added with weight 0.01.
+    """
+    from repro.dist.loss import cast_grad, ce_loss
+
+    tokens = batch["tokens"]
+    logits, _, aux = forward(params, tokens, cfg)
+    ce = ce_loss(cast_grad(logits[:, :-1]), tokens[:, 1:])
+    return ce + 0.01 * aux
+
+
+def _quantize_kv(x):
+    """Per-(token, head) symmetric int8: x [B, T, KVH, hd]."""
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x32 / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant == "int8":
+        sshape = (*shape[:-1], 1)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "ks": jnp.ones(sshape, jnp.float32),
+            "vs": jnp.ones(sshape, jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_specs(cfg: LMConfig, batch: int, seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_quant == "int8":
+        sshape = (*shape[:-1], 1)
+        return {
+            "k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "ks": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            "vs": jax.ShapeDtypeStruct(sshape, jnp.float32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def prefill(params, tokens, cache, cfg: LMConfig):
+    """Fill the cache from position 0; returns (last-token logits, cache)."""
+    logits, new_cache, _ = forward(params, tokens, cfg, cache=cache, pos=0)
+    return logits[:, -1], new_cache
+
+
+def decode_step(params, token, cache, pos, cfg: LMConfig):
+    """One decode step. token [B, 1]; pos: scalar write position."""
+    logits, new_cache, _ = forward(params, token, cfg, cache=cache, pos=pos)
+    return logits[:, -1], new_cache
+
+
+def input_specs(cfg: LMConfig, batch: int, seq: int):
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}

@@ -1,0 +1,2 @@
+"""Serving substrate: query generation, batching/fusion, the discrete-event
+server simulator, diurnal load traces, and the serve driver."""

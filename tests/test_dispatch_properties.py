@@ -1,0 +1,79 @@
+"""Hypothesis property tests on the MoE dispatch and serving invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dist.moe import dispatch_indices, expert_capacity
+from repro.models.layers import MoEConfig
+from repro.serving.simulator import _split_queries
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    k=st.integers(1, 4),
+    E=st.integers(2, 16),
+    cap=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_slots_are_consistent(n, k, E, cap, seed):
+    """Every kept (token, k) assignment owns exactly one slot; slot buffers
+    point back at the right token; per-expert occupancy <= capacity."""
+    k = min(k, E)
+    r = np.random.default_rng(seed)
+    topk = jnp.asarray(r.integers(0, E, (n, k)), jnp.int32)
+    buf_token, buf_valid, slot_of = jax.jit(
+        dispatch_indices, static_argnums=(1, 2, 3, 4)
+    )(topk, E, cap, 0, E)
+    buf_token, buf_valid, slot_of = map(np.asarray, (buf_token, buf_valid, slot_of))
+
+    # occupancy per expert never exceeds capacity (by construction of the
+    # buffer layout e*cap + rank, rank < cap)
+    occupancy = buf_valid.reshape(E, cap).sum(axis=1)
+    assert (occupancy <= cap).all()
+
+    # every non-dropped assignment maps to a valid slot holding its token
+    for t in range(n):
+        for j in range(k):
+            s = slot_of[t, j]
+            if s >= 0:
+                assert buf_valid[s]
+                assert buf_token[s] == t
+    # slots are not shared between assignments
+    used = slot_of[slot_of >= 0]
+    assert len(used) == len(np.unique(used))
+    # total kept == total occupied
+    assert buf_valid.sum() == (slot_of >= 0).sum()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    E=st.integers(2, 64),
+    k=st.integers(1, 8),
+    cf=st.floats(1.0, 4.0),
+)
+def test_capacity_is_sufficient_for_uniform_routing(n, E, k, cf):
+    k = min(k, E)
+    cfg = MoEConfig(d_model=8, d_ff=8, n_experts=E, top_k=k, capacity_factor=cf)
+    cap = expert_capacity(n, cfg)
+    assert cap * E >= n * k  # enough slots for every assignment in aggregate
+    assert cap % 8 == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 500), min_size=1, max_size=50),
+    d=st.integers(1, 256),
+)
+def test_split_queries_conserves_items(sizes, d):
+    sizes = np.asarray(sizes, np.int64)
+    arrivals = np.arange(len(sizes), dtype=np.float64)
+    sub_a, sub_s, qid = _split_queries(sizes, arrivals, d)
+    assert sub_s.sum() == sizes.sum()              # no items lost
+    assert (sub_s >= 1).all() and (sub_s <= d).all()
+    # per-query reassembly
+    for i, s in enumerate(sizes):
+        assert sub_s[qid == i].sum() == s
+        assert (sub_a[qid == i] == arrivals[i]).all()

@@ -1,0 +1,137 @@
+"""Multi-device equivalence tests (8 fake CPU devices).
+
+XLA pins the device count at first init, so each test runs in a fresh
+subprocess with --xla_force_host_platform_device_count=8; the parent
+pytest process keeps its single real device (per the dry-run contract)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str):
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import warnings; warnings.filterwarnings("ignore")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import logical
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=360)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "PASS" in r.stdout, r.stdout
+
+
+def test_sharded_embedding_matches_local():
+    run_sub("""
+    from repro.models.embedding import EmbeddingConfig, init_embedding, \\
+        embedding_bag_local, embedding_bag
+    cfg = EmbeddingConfig(vocab_sizes=(100, 300, 50), dim=8,
+                          pooling=(4, 2, 1), row_pad=8)
+    p = init_embedding(jax.random.PRNGKey(0), cfg)
+    ids = jnp.asarray(np.random.default_rng(0).integers(-1, 50, (16, 3, 4)),
+                      jnp.int32)
+    ref = embedding_bag_local(p, ids, cfg)
+    with logical.axis_rules(mesh, {"batch": "data", "model": "model"}):
+        p_sh = jax.device_put(p, {"table": NamedSharding(mesh, P("model", None))})
+        out = jax.jit(lambda p, i: embedding_bag(p, i, cfg))(p_sh, ids)
+        g_sh = jax.jit(jax.grad(lambda p: (embedding_bag(p, ids, cfg)**2).sum()))(p_sh)
+    g = jax.grad(lambda p: (embedding_bag_local(p, ids, cfg)**2).sum())(p)
+    assert np.allclose(ref, np.asarray(out), rtol=1e-5, atol=1e-6)
+    assert np.allclose(np.asarray(g["table"]), np.asarray(g_sh["table"]),
+                       rtol=1e-5, atol=1e-6)
+    print("PASS")
+    """)
+
+
+def test_moe_ep_matches_dense():
+    run_sub("""
+    from repro.models.layers import MoEConfig, init_moe, apply_moe_dense
+    from repro.dist.moe import moe_apply
+    cfg = MoEConfig(d_model=32, d_ff=16, n_experts=6, top_k=2, n_shared=1,
+                    shared_d_ff=64, capacity_factor=8.0, pad_to=4)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    want, _ = apply_moe_dense(p, x, cfg)
+    with logical.axis_rules(mesh, {"batch": "data", "model": "model"}):
+        out, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg))(p, x)
+    assert np.allclose(want, np.asarray(out), rtol=1e-4, atol=1e-5)
+    print("PASS")
+    """)
+
+
+def test_vocab_sharded_ce_matches_local():
+    run_sub("""
+    from repro.dist.loss import ce_loss
+    logits = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 64))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64)
+    ref = float(ce_loss(logits, targets))
+    g_ref = jax.grad(lambda l: ce_loss(l, targets))(logits)
+    with logical.axis_rules(mesh, {"batch": "data", "model": "model",
+                                   "vocab": "model"}):
+        lg = jax.device_put(logits, NamedSharding(mesh, P("data", None, "model")))
+        out = float(jax.jit(ce_loss)(lg, targets))
+        g_sh = jax.jit(jax.grad(lambda l: ce_loss(l, targets)))(lg)
+    assert abs(ref - out) < 1e-5
+    assert np.allclose(np.asarray(g_sh), np.asarray(g_ref), rtol=1e-4,
+                       atol=1e-6)
+    print("PASS")
+    """)
+
+
+def test_gnn_vertex_partition_matches_local():
+    run_sub("""
+    from repro.models.gnn import GNNConfig, init, apply_full, softmax_ce
+    from repro.dist.gnn import apply_full_sharded
+    cfg = GNNConfig(name="t", d_feat=8, d_hidden=16, n_classes=4)
+    p = init(jax.random.PRNGKey(0), cfg)
+    N, E = 64, 256
+    r = np.random.default_rng(0)
+    feats = jnp.asarray(r.normal(size=(N, 8)).astype(np.float32))
+    edges = jnp.asarray(r.integers(0, N, (2, E)), jnp.int32)
+    labels = jnp.asarray(r.integers(0, 4, N), jnp.int32)
+    mask = jnp.ones((N,), bool)
+    ref = softmax_ce(apply_full(p, feats, edges, cfg), labels, mask)
+    loss = jax.jit(lambda p, f, e, l, m: apply_full_sharded(
+        p, f, e, l, m, cfg, mesh, N))(p, feats, edges, labels, mask)
+    assert abs(float(ref) - float(loss)) < 1e-4, (float(ref), float(loss))
+    print("PASS")
+    """)
+
+
+def test_lm_train_step_runs_sharded():
+    """End-to-end: tiny LM train step under a (2,4) mesh with the full
+    sharding rules — the integration test for the dry-run path, executed
+    for real."""
+    run_sub("""
+    import dataclasses
+    from repro.configs.registry import get_arch
+    from repro.launch.steps import build_cell
+    from repro.launch import mesh as mesh_lib
+    arch = get_arch("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        arch.SMOKE, n_layers=2)
+    m = mesh_lib.make_debug_mesh()
+    cell = build_cell("olmoe-1b-7b", "train_4k", mesh=m, cfg_override=cfg)
+    # shrink the batch specs for an actual run: rebuild with smoke dims via
+    # direct state init + small batch
+    state = jax.jit(cell.init_state)(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (16, 32)), jnp.int32)
+    with logical.axis_rules(m, cell.rules):
+        step = jax.jit(cell.step_fn)
+        state, metrics = step(state, {"tokens": toks})
+        state, metrics = step(state, {"tokens": toks})
+    assert np.isfinite(float(metrics["loss"]))
+    print("PASS")
+    """)

@@ -1,0 +1,144 @@
+"""EmbeddingBag substrate: unit + hypothesis property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.embedding import (
+    EmbeddingConfig,
+    HotColdLayout,
+    embedding_bag_hot_cold,
+    embedding_bag_local,
+    embedding_bag_ragged,
+    init_embedding,
+    make_hot_cold_layout,
+    split_hot_cold,
+)
+
+
+def _cfg(vocabs=(50, 100, 30), dim=8, pooling=(4, 2, 1), **kw):
+    return EmbeddingConfig(vocab_sizes=vocabs, dim=dim, pooling=pooling,
+                           row_pad=8, **kw)
+
+
+def _ref_bag(table_np, ids, cfg):
+    """Numpy oracle for the combined-table multi-hot bag."""
+    B, F, P = ids.shape
+    out = np.zeros((B, F, cfg.dim), np.float64)
+    offs = cfg.row_offsets
+    counts = np.zeros((B, F), np.int64)
+    for b in range(B):
+        for f in range(F):
+            for p in range(P):
+                i = ids[b, f, p]
+                if i >= 0:
+                    out[b, f] += table_np[offs[f] + i]
+                    counts[b, f] += 1
+    if cfg.combine == "mean":
+        out = out / np.maximum(counts, 1)[..., None]
+    return out
+
+
+def test_matches_numpy_oracle(rng):
+    cfg = _cfg()
+    params = init_embedding(jax.random.PRNGKey(0), cfg)
+    ids = rng.integers(-1, 30, (6, 3, 4)).astype(np.int32)
+    got = embedding_bag_local(params, jnp.asarray(ids), cfg)
+    want = _ref_bag(np.asarray(params["table"]), ids, cfg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mean_combine(rng):
+    cfg = _cfg(combine="mean")
+    params = init_embedding(jax.random.PRNGKey(0), cfg)
+    ids = rng.integers(-1, 30, (4, 3, 4)).astype(np.int32)
+    got = embedding_bag_local(params, jnp.asarray(ids), cfg)
+    want = _ref_bag(np.asarray(params["table"]), ids, cfg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    pooling=st.integers(1, 6),
+    dim=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_padding_invariance(batch, pooling, dim, seed):
+    """Appending -1 padding never changes the pooled result."""
+    cfg = EmbeddingConfig(vocab_sizes=(40,), dim=dim, pooling=(pooling,),
+                          row_pad=8)
+    cfg_wide = EmbeddingConfig(vocab_sizes=(40,), dim=dim,
+                               pooling=(pooling + 3,), row_pad=8)
+    params = init_embedding(jax.random.PRNGKey(seed), cfg)
+    r = np.random.default_rng(seed)
+    ids = r.integers(0, 40, (batch, 1, pooling)).astype(np.int32)
+    ids_padded = np.concatenate(
+        [ids, np.full((batch, 1, 3), -1, np.int32)], axis=-1
+    )
+    a = embedding_bag_local(params, jnp.asarray(ids), cfg)
+    b = embedding_bag_local(params, jnp.asarray(ids_padded), cfg_wide)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), hot_rows=st.integers(0, 40))
+def test_property_hot_cold_partition_exact(seed, hot_rows):
+    """hot + cold partial sums == unpartitioned bag for any split point."""
+    cfg = _cfg(vocabs=(40, 40), pooling=(3, 2))
+    params = init_embedding(jax.random.PRNGKey(seed), cfg)
+    layout = HotColdLayout(cfg=cfg, hot_rows=(hot_rows, max(40 - hot_rows, 0)))
+    split = split_hot_cold(params, layout)
+    r = np.random.default_rng(seed)
+    ids = r.integers(-1, 40, (5, 2, 3)).astype(np.int32)
+    hot, cold = embedding_bag_hot_cold(split, jnp.asarray(ids), layout)
+    want = embedding_bag_local(params, jnp.asarray(ids), cfg)
+    np.testing.assert_allclose(np.asarray(hot) + np.asarray(cold), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hot_layout_capacity_budget():
+    cfg = _cfg()
+    layout = make_hot_cold_layout(cfg, capacity_rows=60)
+    assert sum(layout.hot_rows) <= 60
+    assert all(h <= v for h, v in zip(layout.hot_rows, cfg.vocab_sizes))
+
+
+def test_ragged_bag_matches_segments(rng):
+    table = jnp.asarray(rng.normal(size=(30, 4)).astype(np.float32))
+    ids = jnp.asarray([0, 1, 2, 5, 5, 7], jnp.int32)
+    seg = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    out = embedding_bag_ragged(table, ids, seg, 3)
+    want = np.stack([
+        np.asarray(table)[[0, 1]].sum(0),
+        np.asarray(table)[[2, 5]].sum(0),
+        np.asarray(table)[[5, 7]].sum(0),
+    ])
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_qr_compression_storage():
+    cfg = EmbeddingConfig(vocab_sizes=(1_000_000, 100), dim=4,
+                          pooling=(1, 1), qr_features=(0,), qr_buckets=1024,
+                          row_pad=8)
+    # storage ~ 1e6/1024 + 1024 + 100 rows, not 1e6
+    assert cfg.total_rows < 4000
+    params = init_embedding(jax.random.PRNGKey(0), cfg)
+    ids = jnp.asarray([[[123456], [7]]], jnp.int32)
+    out = embedding_bag_local(params, ids, cfg)
+    assert out.shape == (1, 2, 4)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_grad_only_touches_looked_up_rows():
+    cfg = _cfg(vocabs=(20,), pooling=(2,))
+    params = init_embedding(jax.random.PRNGKey(0), cfg)
+    ids = jnp.asarray([[[3, 5]]], jnp.int32)
+
+    g = jax.grad(lambda p: embedding_bag_local(p, ids, cfg).sum())(params)
+    gt = np.asarray(g["table"])
+    touched = set(np.nonzero(np.abs(gt).sum(1))[0].tolist())
+    assert touched == {3, 5}

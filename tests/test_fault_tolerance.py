@@ -1,0 +1,125 @@
+"""Checkpoint/restart, elastic re-provisioning, straggler hedging."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import EfficiencyTable, provision_hercules
+from repro.launch.steps import build_cell
+from repro.serving.router import QueryRouter, ServerSlot
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Trainer, TrainerConfig
+
+import jax
+import jax.numpy as jnp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batches(cell, n=10_000):
+    r = np.random.default_rng(0)
+
+    def mk(spec):
+        if spec.dtype == jnp.int32:
+            return jnp.asarray(r.integers(0, 2, spec.shape), jnp.int32)
+        if spec.dtype == jnp.bool_:
+            return jnp.ones(spec.shape, bool)
+        return jnp.asarray(r.normal(size=spec.shape), spec.dtype)
+
+    while True:
+        yield jax.tree.map(mk, cell.batch_specs)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        mgr.save(7, state, blocking=True)
+        assert mgr.latest_step() == 7
+        out = mgr.restore(7, jax.tree.map(jnp.zeros_like, state))
+        np.testing.assert_allclose(out["a"], state["a"])
+        np.testing.assert_allclose(out["b"]["c"], state["b"]["c"])
+
+    def test_gc_keeps_max(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+        s = {"x": jnp.zeros(2)}
+        for i in (1, 2, 3, 4):
+            mgr.save(i, s, blocking=True)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_crash_restart_resumes(self, tmp_path):
+        cell = build_cell("dlrm-rm2", "train_batch", mesh=None)
+        step = cell.jitted()
+        cfg = TrainerConfig(total_steps=12, ckpt_every=5,
+                            ckpt_dir=str(tmp_path), log_every=1)
+        t = Trainer(step, cell.init_state, _batches(cell), cfg)
+        with pytest.raises(RuntimeError, match="injected crash"):
+            t.run(KEY, crash_at=8)
+        # restart: resumes from step 5, finishes
+        t2 = Trainer(step, cell.init_state, _batches(cell), cfg)
+        state, hist = t2.run(KEY)
+        assert t2.ckpt.latest_step() == 12
+        assert hist[0]["step"] == 6  # resumed after step-5 commit
+
+
+class TestElasticProvisioning:
+    def test_reprovision_after_failures(self):
+        qps = np.array([[2000.0, 1500.0], [9000.0, 8000.0]])
+        power = np.array([[175.0, 175.0], [475.0, 475.0]])
+        avail = np.array([50, 10])
+        t = EfficiencyTable(("cpu", "accel"), ("a", "b"), qps, power, avail)
+        load = np.array([40_000.0, 30_000.0])
+        r1 = provision_hercules(t, load)
+        assert r1.feasible
+        # 8 accel servers die -> re-provision on surviving pool
+        t2 = EfficiencyTable(t.servers, t.workloads, qps, power,
+                             np.array([50, 2]))
+        r2 = provision_hercules(t2, load)
+        assert r2.feasible
+        assert (r2.alloc.sum(axis=1) <= t2.avail).all()
+        assert r2.alloc[0].sum() > r1.alloc[0].sum()  # shifted to CPUs
+
+    def test_infeasible_detected(self):
+        qps = np.array([[100.0]])
+        t = EfficiencyTable(("cpu",), ("a",), qps, np.array([[100.0]]),
+                            np.array([2]))
+        r = provision_hercules(t, np.array([10_000.0]))
+        assert not r.feasible
+
+
+class TestRouter:
+    def test_failover_reroutes(self):
+        slots = [ServerSlot("a", 100.0), ServerSlot("b", 90.0)]
+        router = QueryRouter(slots, seed=0)
+        # one server dies mid-query: the retry lands on the survivor
+        died = {"n": 0}
+
+        def service(slot):
+            return 0.01
+
+        lat, attempts = router.dispatch(service, fail_prob=0.5)
+        assert np.isfinite(lat) or sum(s.healthy for s in slots) < 2
+        # with every server failing, the router drains the pool then raises
+        slots2 = [ServerSlot("a", 100.0), ServerSlot("b", 90.0)]
+        router2 = QueryRouter(slots2, seed=0)
+        with pytest.raises(RuntimeError):
+            for _ in range(10):
+                router2.dispatch(service, fail_prob=1.0)
+        assert not any(s.healthy for s in slots2)
+
+    def test_hedging_reduces_tail(self):
+        r = np.random.default_rng(0)
+        slots = [ServerSlot("a", 100.0), ServerSlot("b", 100.0)]
+        router = QueryRouter(slots, hedge_quantile=0.9, hedge_factor=1.5,
+                             seed=0)
+
+        def service(slot):
+            return 0.010 if r.random() > 0.05 else 0.200  # 5% stragglers
+
+        lats = [router.dispatch(service)[0] for _ in range(500)]
+        hedged_p99 = float(np.quantile(lats, 0.99))
+        # without hedging p99 would be ~0.2; hedging brings most retries home
+        assert hedged_p99 <= 0.2
+
+    def test_all_dead_raises(self):
+        router = QueryRouter([ServerSlot("a", 1.0, healthy=False)])
+        with pytest.raises(RuntimeError):
+            router.pick()

@@ -1,0 +1,200 @@
+"""Hercules core: gradient search, partition, simulator, cluster LP.
+
+Includes the paper's qualitative claims as assertions (Fig. 4/6/8) and
+hypothesis property tests on the provisioning invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_models import paper_profile
+from repro.core.baselines import baymax_qps, deeprecsys_qps
+from repro.core.cluster import (
+    EfficiencyTable,
+    provision_greedy,
+    provision_hercules,
+    provision_nh,
+)
+from repro.core.devices import SERVER_TYPES
+from repro.core.gradient_search import gradient_search
+from repro.core.lp import round_and_repair, solve_relaxation
+from repro.core.partition import enumerate_placements
+from repro.serving.diurnal import diurnal_trace, load_increment_rate
+from repro.serving.simulator import SchedConfig, max_sustainable_qps, simulate
+
+
+def qsizes(n=400, seed=0):
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+SIZES = qsizes()
+
+
+class TestPartition:
+    def test_cpu_plans(self):
+        prof = paper_profile("dlrm-rmc1")
+        plans = [p.plan for p in enumerate_placements(prof, SERVER_TYPES["T2"])]
+        assert plans == ["cpu_model", "cpu_sd"]
+
+    def test_accel_hot_partition_sized_to_capacity(self):
+        prof = paper_profile("dlrm-rmc3")  # 19 GB tables > 16 GB V100
+        pls = enumerate_placements(prof, SERVER_TYPES["T7"])
+        by = {p.plan: p for p in pls}
+        assert "accel_hot" in by and 0.0 < by["accel_hot"].hot_frac < 1.0
+        assert "accel_full" not in by  # cannot fit whole model (paper §III-B)
+
+    def test_small_model_fits_whole(self):
+        prof = paper_profile("dlrm-rmc3", prod=False)
+        pls = enumerate_placements(prof, SERVER_TYPES["T7"])
+        assert any(p.plan == "accel_full" for p in pls)
+
+    def test_hot_hit_rate_monotone(self):
+        prof = paper_profile("dlrm-rmc1")
+        rates = [prof.hot_hit_rate(f) for f in (0.0, 0.05, 0.2, 0.5, 1.0)]
+        assert rates == sorted(rates)
+        assert rates[0] == 0.0 and rates[-1] == 1.0
+        assert rates[2] > 0.5  # locality: 20% of rows cover >50% of accesses
+
+
+class TestSimulator:
+    def test_qps_increases_with_capacity(self):
+        prof = paper_profile("dlrm-rmc1")
+        pl = enumerate_placements(prof, SERVER_TYPES["T2"])[0]
+        q1, _ = max_sustainable_qps(pl, SERVER_TYPES["T2"],
+                                    SchedConfig(batch=64, m=4, o=2), 20.0, SIZES)
+        q2, _ = max_sustainable_qps(pl, SERVER_TYPES["T2"],
+                                    SchedConfig(batch=64, m=8, o=2), 20.0, SIZES)
+        # more threads trade bandwidth share against parallel slots for a
+        # memory-bound model; never catastrophically worse
+        assert q2 >= q1 * 0.8
+
+    def test_latency_grows_with_load(self):
+        prof = paper_profile("dlrm-rmc1")
+        pl = enumerate_placements(prof, SERVER_TYPES["T2"])[0]
+        sched = SchedConfig(batch=64, m=10, o=2)
+        lo = simulate(pl, SERVER_TYPES["T2"], sched, 200.0, SIZES)
+        hi = simulate(pl, SERVER_TYPES["T2"], sched, 1800.0, SIZES)
+        assert hi.p95_ms >= lo.p95_ms
+
+    def test_paper_fig4_op_parallelism_beats_flat(self):
+        """10x2 beats 20x1 for RMC1 on CPU-T2 (paper: up to 1.35x)."""
+        prof = paper_profile("dlrm-rmc1")
+        pl = enumerate_placements(prof, SERVER_TYPES["T2"])[0]
+        q20, _ = max_sustainable_qps(pl, SERVER_TYPES["T2"],
+                                     SchedConfig(batch=64, m=20, o=1), 20.0, SIZES)
+        q10, _ = max_sustainable_qps(pl, SERVER_TYPES["T2"],
+                                     SchedConfig(batch=64, m=10, o=2), 20.0, SIZES)
+        assert q10 > q20 * 1.1
+
+    def test_paper_fig6_fusion_beats_baselines(self):
+        """co-location + fusion > Baymax > DeepRecSys on the accelerator."""
+        prof = paper_profile("dlrm-rmc3")
+        dev = SERVER_TYPES["T7"]
+        q_drs, _, _ = deeprecsys_qps(prof, dev, SIZES)
+        q_bay, _, _ = baymax_qps(prof, dev, SIZES)
+        res = gradient_search(prof, dev, SIZES)
+        assert q_bay >= q_drs
+        assert res.qps > q_bay
+
+    def test_nmp_accelerates_memory_bound(self):
+        prof = paper_profile("dlrm-rmc1")
+        r2 = gradient_search(prof, SERVER_TYPES["T2"], SIZES,
+                             o_grid=(1, 2))
+        r3 = gradient_search(prof, SERVER_TYPES["T3"], SIZES,
+                             o_grid=(1, 2))
+        assert r3.qps > r2.qps * 1.5  # NMP x2 serves the gather-bound model
+
+
+class TestGradientSearch:
+    def test_explores_fraction_of_space(self):
+        prof = paper_profile("dlrm-rmc1")
+        res = gradient_search(prof, SERVER_TYPES["T2"], SIZES, o_grid=(1, 2))
+        assert 0 < res.evals < res.space_size
+        assert res.qps > 0
+        assert res.p95_ms <= prof.sla_ms + 1e-6
+
+    def test_respects_power_budget(self):
+        prof = paper_profile("dlrm-rmc1")
+        res = gradient_search(prof, SERVER_TYPES["T2"], SIZES,
+                              power_budget_w=120.0, o_grid=(1,))
+        if res.qps > 0:
+            assert res.power_w <= 120.0 + 1e-6
+
+
+def _rand_table(r, H=3, M=2):
+    qps = r.uniform(500, 10_000, (H, M))
+    power = r.uniform(100, 600, (H, 1)) * np.ones((1, M))
+    avail = r.integers(3, 40, H)
+    return EfficiencyTable(tuple(f"T{i}" for i in range(H)),
+                           tuple(f"w{i}" for i in range(M)),
+                           qps, power, avail)
+
+
+class TestClusterLP:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_hercules_feasible_and_no_worse(self, seed):
+        """LP result satisfies load + capacity and never beats greedy's
+        power from below (global optimum <= greedy's cost)."""
+        r = np.random.default_rng(seed)
+        t = _rand_table(r)
+        total_cap = (t.avail[:, None] * t.qps).sum(axis=0)
+        load = r.uniform(0.1, 0.6, 2) * total_cap  # feasible region
+        rh = provision_hercules(t, load)
+        rg = provision_greedy(t, load)
+        if not rg.feasible:
+            return
+        assert rh.feasible
+        served = (rh.alloc * t.qps).sum(axis=0)
+        assert (served >= load - 1e-6).all()
+        assert (rh.alloc.sum(axis=1) <= t.avail).all()
+        assert rh.provisioned_power_w <= rg.provisioned_power_w + 1e-6
+
+    def test_paper_fig8_priority_contention(self):
+        """When two workloads compete for a scarce best server type and
+        their benefit differs, hercules beats greedy (the Fig. 8 case)."""
+        qps = np.array([[2500., 1800.],    # T2 CPU
+                        [10000., 9500.],   # T3 NMP (scarce)
+                        [8000., 2000.]])   # T7 GPU (good for w0 only)
+        power = np.array([[175., 175.], [175., 175.], [475., 475.]])
+        t = EfficiencyTable(("T2", "T3", "T7"), ("rmc1", "rmc2"),
+                            qps, power, np.array([200, 10, 40]))
+        load = np.array([100_000.0, 80_000.0])
+        rg = provision_greedy(t, load)
+        rh = provision_hercules(t, load)
+        assert rg.feasible and rh.feasible
+        assert rh.provisioned_power_w < rg.provisioned_power_w
+
+    def test_nh_worse_than_greedy(self):
+        r = np.random.default_rng(3)
+        t = _rand_table(r, H=4, M=2)
+        total_cap = (t.avail[:, None] * t.qps).sum(axis=0)
+        load = 0.3 * total_cap
+        rn = provision_nh(t, load, seed=1)
+        rg = provision_greedy(t, load)
+        if rn.feasible and rg.feasible:
+            assert rg.provisioned_power_w <= rn.provisioned_power_w + 1e-6
+
+    def test_lp_matches_bruteforce_small(self):
+        qps = np.array([[10.0, 8.0], [5.0, 9.0]])
+        power = np.array([[3.0, 3.0], [2.0, 2.0]])
+        t = EfficiencyTable(("A", "B"), ("x", "y"), qps, power,
+                            np.array([4, 4]))
+        load = np.array([20.0, 18.0])
+        r = provision_hercules(t, load)
+        # brute force integer search
+        best = np.inf
+        for a in np.ndindex(5, 5, 5, 5):
+            n = np.array(a, float).reshape(2, 2)
+            if (n.sum(1) <= t.avail).all() and ((n * qps).sum(0) >= load).all():
+                best = min(best, (n * power).sum())
+        assert r.feasible
+        assert r.provisioned_power_w <= best * 1.15  # near-optimal rounding
+
+
+class TestDiurnal:
+    def test_trace_shape(self):
+        tr = diurnal_trace(50_000, seed=0)
+        assert tr.max() <= 50_000 * 1.1
+        assert tr.min() < 0.55 * tr.max()  # >50% peak-valley fluctuation
+        assert 0.0 <= load_increment_rate(tr) <= 1.0

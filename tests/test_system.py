@@ -1,0 +1,59 @@
+"""End-to-end behaviour tests for the Hercules system."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import PAPER_MODELS, paper_profile
+from repro.core.cluster import EfficiencyTable, provision_day
+from repro.core.devices import SERVER_TYPES
+from repro.core.gradient_search import gradient_search
+from repro.serving.diurnal import diurnal_trace, load_increment_rate
+
+
+def qsizes(n=300, seed=0):
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+def test_offline_profiling_to_online_provisioning():
+    """The paper's two-stage flow end to end on a reduced setup:
+    profile 2 workloads x 3 servers -> efficiency table -> provision a
+    diurnal day with all three policies -> hercules <= greedy <= nh."""
+    sizes = qsizes()
+    workloads = ["dlrm-rmc1", "dlrm-rmc3"]
+    servers = ["T2", "T3", "T7"]
+    qps = np.zeros((3, 2))
+    power = np.zeros((3, 2))
+    for j, w in enumerate(workloads):
+        prof = paper_profile(w)
+        for i, s in enumerate(servers):
+            res = gradient_search(prof, SERVER_TYPES[s], sizes, o_grid=(1, 2))
+            qps[i, j] = res.qps
+            power[i, j] = SERVER_TYPES[s].peak_power_w
+    assert (qps > 0).all()
+
+    table = EfficiencyTable(tuple(servers), tuple(workloads), qps, power,
+                            np.array([70, 15, 5]))
+    peak = 0.25 * (table.avail[:, None] * qps).sum(axis=0).min()
+    traces = np.stack([diurnal_trace(peak, seed=1, n_steps=48),
+                       diurnal_trace(peak, seed=2, n_steps=48)])
+    R = load_increment_rate(traces[0])
+    out = {}
+    for pol in ("nh", "greedy", "hercules"):
+        out[pol] = provision_day(table, traces, policy=pol, overprovision=R)
+        assert out[pol]["feasible"], pol
+    assert out["hercules"]["peak_power_w"] <= out["greedy"]["peak_power_w"] + 1e-6
+    assert out["greedy"]["avg_power_w"] <= out["nh"]["avg_power_w"] + 1e-6
+
+
+def test_paper_models_all_profile():
+    for name in PAPER_MODELS:
+        prof = paper_profile(name)
+        assert prof.sla_ms > 0
+        assert len(prof.ops) >= 2
+        t = prof.totals()
+        assert t["flops"] > 0
+        if name in ("dlrm-rmc1", "dlrm-rmc2"):
+            # memory-bound on a CPU server (Fig 1): random-gather time at
+            # ~4 GB/s/core exceeds compute time at ~77 GFLOP/s
+            # (RMC3 is compute-dominated per the paper)
+            assert t["gather_bytes"] / 4e9 > t["flops"] / 77e9
