@@ -20,14 +20,16 @@ reproduces the measured idle-cycle growth.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
-from repro.models.embedding import EmbeddingConfig
-from repro.models.gnn import GNNConfig
-from repro.models.recsys_base import RecsysConfig
-from repro.models.transformer import LMConfig
+if TYPE_CHECKING:  # config classes are used as annotations only — keeping
+    # these type-only means repro.core stays importable without dragging in
+    # the JAX model stack (and repro.dist) behind it
+    from repro.models.gnn import GNNConfig
+    from repro.models.recsys_base import RecsysConfig
+    from repro.models.transformer import LMConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,9 @@
+"""Distributed execution layer: logical-axis sharding, spec trees, and the
+sharded dataflows (embedding Psum, expert-parallel MoE, vocab-parallel CE,
+vertex-partition GNN) that back the mesh/dry-run paths.
+
+Submodules import lazily where they touch model code so that
+``repro.dist.logical`` / ``repro.dist.sharding`` stay importable from
+pure-config contexts.
+"""
+from repro.dist import logical  # noqa: F401  (the universal entry point)

@@ -1,0 +1,96 @@
+"""Logical-axis sharding annotations (MaxText/Flax-linen style, pared down).
+
+Model code never names mesh axes directly — it annotates arrays with
+*logical* axes ("batch", "seq", "heads", "vocab", "expert", "nodes", ...)
+via :func:`constrain`.  The launcher binds logical names to mesh axes with
+:func:`axis_rules`; the same model code runs un-annotated on a single
+device (every helper here is a no-op outside a binding context), which is
+what keeps the smoke tests and the 512-chip dry-run on one code path.
+
+The binding is tracked per-thread at *trace* time: ``axis_rules`` is
+entered around ``jax.jit``/tracing, not captured inside the jaxpr, so a
+cell can be lowered under different meshes without retouching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _context():
+    """The innermost (mesh, rules) binding, or None."""
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: dict):
+    """Bind logical axis names to mesh axes for the enclosed trace.
+
+    ``rules`` maps logical name -> mesh axis name, tuple of mesh axis names
+    (e.g. ``("pod", "data")`` for multi-pod data parallelism), or None
+    (replicate).  Nesting is allowed; the innermost binding wins.
+    """
+    prev = _context()
+    _STATE.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh():
+    """The mesh of the active binding, or None."""
+    ctx = _context()
+    return None if ctx is None else ctx[0]
+
+
+def current_rules() -> dict | None:
+    """The logical->mesh rules of the active binding, or None."""
+    ctx = _context()
+    return None if ctx is None else ctx[1]
+
+
+def resolve(axes) -> P:
+    """Resolve a tuple of logical names (or None) to a mesh PartitionSpec.
+
+    Unbound logical names resolve to None (replicated) so model code can
+    annotate axes that only some meshes shard.
+    """
+    ctx = _context()
+    rules = {} if ctx is None else ctx[1]
+    return P(*(None if a is None else rules.get(a) for a in axes))
+
+
+def constrain(x, axes):
+    """``with_sharding_constraint(x, axes)`` under a binding; identity without.
+
+    ``axes``: one logical name (or None) per array dimension.
+    """
+    ctx = _context()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(axes)} logical axes for rank-{x.ndim} array"
+        )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(axes))
+    )
+
+
+def model_axis_name():
+    """Mesh axis bound to the logical "model" axis, or None.
+
+    This is the switch the embedding/MoE/loss layers use to pick between
+    single-device semantics and the sharded dataflow.
+    """
+    ctx = _context()
+    if ctx is None:
+        return None
+    return ctx[1].get("model")

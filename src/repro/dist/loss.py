@@ -1,0 +1,61 @@
+"""Vocab-parallel cross-entropy and mixed-precision gradient casting.
+
+With the lm_head column-sharded (logical "vocab" axis), the naive CE
+recipe would all-gather the [B, T, V] logits onto every shard.  Writing
+the gold-logit selection as a one-hot contraction keeps everything local:
+each shard reduces its vocab slice (partial logsumexp terms, partial gold
+dot product) and GSPMD inserts scalar-sized psums — the Megatron
+vocab-parallel loss, recovered at the XLA level.  The math is exact, so
+the same function doubles as the single-device reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import logical
+
+
+def ce_loss(logits, targets):
+    """Token-mean cross entropy.  logits: [..., V] (any leading dims),
+    targets: matching integer array.  Stable f32 internals regardless of
+    the logits dtype; vocab-sharded logits stay sharded throughout."""
+    x = logits.astype(jnp.float32)
+    if x.ndim >= 2:
+        x = logical.constrain(
+            x, ("batch",) + (None,) * (x.ndim - 2) + ("vocab",)
+        )
+    vocab = x.shape[-1]
+    # stable logsumexp: the max reduces locally then psums (scalar per token)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    logz = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(x - m), axis=-1))
+    # gold logit via one-hot contraction: local partial dot + psum, never a
+    # cross-shard gather on the sharded vocab dim
+    onehot = jax.nn.one_hot(targets, vocab, dtype=x.dtype)
+    gold = jnp.sum(x * onehot, axis=-1)
+    return jnp.mean(logz - gold)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _cast(x, dtype):
+    return x.astype(jnp.float32)
+
+
+def _cast_fwd(x, dtype):
+    return x.astype(jnp.float32), None
+
+
+def _cast_bwd(dtype, _res, g):
+    return (g.astype(dtype),)
+
+
+_cast.defvjp(_cast_fwd, _cast_bwd)
+
+
+def cast_grad(x):
+    """Cast to f32 for the loss while keeping the backward pass in the
+    original activation dtype (bf16 grads flow back through the model;
+    the f32 cast never becomes a stored f32 activation)."""
+    return _cast(x, x.dtype)

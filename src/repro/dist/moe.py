@@ -1,0 +1,135 @@
+"""Expert-parallel MoE dispatch (Switch-style capacity buffers).
+
+The dense reference (``repro.models.layers.apply_moe_dense``) runs every
+expert on every token — O(E·N) compute.  The production path here routes
+each token's top-k assignments into fixed-size per-expert capacity buffers
+(grouped-GEMM layout ``[E, capacity, d]``) so expert compute is O(N·k) and
+the stacked expert weights shard over the model axis (logical "expert"
+axis).  Under a mesh binding the buffers are annotated expert-sharded and
+GSPMD lowers the gather/scatter to the all-to-all + psum dataflow; without
+a binding the same code is the single-device grouped dispatch.
+
+``e_start``/``e_count`` expose the per-shard expert window so a caller
+(or a shard_map'd kernel) can compute one expert slice's partial output;
+partial outputs over disjoint windows sum to the full result, which is the
+invariant ``tests/test_models.py::test_expert_partials_sum_to_full`` pins.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import logical
+from repro.models.layers import MoEConfig, apply_swiglu, moe_router
+
+
+def expert_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    """Per-expert buffer slots for ``n_tokens``: the uniform-routing share
+    ``n·k/E`` scaled by the capacity factor, rounded up to a multiple of 8
+    (TPU sublane alignment).  With capacity_factor >= 1 this always admits
+    every assignment in aggregate: capacity · E >= n · k."""
+    want = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return -(-want // 8) * 8
+
+
+def dispatch_indices(topk, n_experts: int, capacity: int,
+                     e_start: int = 0, e_count: int | None = None):
+    """Slot assignment for the capacity buffers of experts
+    ``[e_start, e_start + e_count)``.
+
+    topk: [n, k] int32 expert ids (position-priority: earlier tokens win
+    slots when an expert oversubscribes its capacity).
+
+    Returns:
+      buf_token: [e_count * capacity] int32 — token feeding each slot
+                 (slot layout: ``(e - e_start) * capacity + rank``)
+      buf_valid: [e_count * capacity] bool — slot occupied
+      slot_of:   [n, k] int32 — slot of each assignment, -1 if dropped
+                 (over capacity or outside the expert window)
+    """
+    if e_count is None:
+        e_count = n_experts
+    n, k = topk.shape
+    flat = topk.reshape(-1)                                   # [n*k]
+    token_of = (jnp.arange(n * k, dtype=jnp.int32) // k)      # [n*k]
+    # rank of each assignment within its expert, in flat (position) order —
+    # computed over ALL experts so a window sees the same ranks as the full
+    # dispatch (windows must tile consistently)
+    onehot = (flat[:, None] == jnp.arange(n_experts, dtype=jnp.int32)[None, :])
+    rank = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)  # [n*k]
+    rank = rank.astype(jnp.int32)
+
+    keep = (rank < capacity) & (flat >= e_start) & (flat < e_start + e_count)
+    slot = (flat - e_start) * capacity + rank
+    slot_of = jnp.where(keep, slot, -1).reshape(n, k)
+
+    n_slots = e_count * capacity
+    scatter_to = jnp.where(keep, slot, n_slots)               # drops -> spill row
+    buf_token = (
+        jnp.zeros((n_slots + 1,), jnp.int32).at[scatter_to].set(token_of)[:n_slots]
+    )
+    buf_valid = (
+        jnp.zeros((n_slots + 1,), bool).at[scatter_to].set(keep)[:n_slots]
+    )
+    return buf_token, buf_valid, slot_of
+
+
+def moe_apply_grouped(params, x, cfg: MoEConfig, *, e_start: int = 0,
+                      e_count: int | None = None, capacity: int | None = None):
+    """Routed-expert output via capacity-buffer grouped dispatch.
+
+    x: [N, d].  Computes only experts ``[e_start, e_start + e_count)`` —
+    the full (padded) expert range by default — and does NOT add the shared
+    expert (see :func:`moe_apply`).  Returns ([N, d], aux_loss); dropped
+    assignments contribute zero (damped output, never NaN).
+    """
+    e_pad = cfg.n_experts_padded
+    if e_count is None:
+        e_count = e_pad
+    n, d = x.shape
+    if capacity is None:
+        capacity = expert_capacity(n, cfg)
+
+    topk_idx, topk_w, aux = moe_router(params, x, cfg)
+    buf_token, buf_valid, slot_of = dispatch_indices(
+        topk_idx, e_pad, capacity, e_start, e_count
+    )
+
+    # gather tokens into the [e, capacity, d] buffers (zero for empty slots)
+    xb = jnp.take(x, buf_token, axis=0) * buf_valid[:, None].astype(x.dtype)
+    xb = logical.constrain(
+        xb.reshape(e_count, capacity, d), ("expert", None, None)
+    )
+
+    ex = params["experts"]
+    wg = jax.lax.dynamic_slice_in_dim(ex["w_gate"], e_start, e_count, axis=0)
+    wu = jax.lax.dynamic_slice_in_dim(ex["w_up"], e_start, e_count, axis=0)
+    wd = jax.lax.dynamic_slice_in_dim(ex["w_down"], e_start, e_count, axis=0)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xb, wu
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, wd)
+    y = logical.constrain(y, ("expert", None, None)).reshape(
+        e_count * capacity, d
+    )
+
+    # combine: out[t] = sum_j w[t,j] * y[slot_of[t,j]] over kept assignments
+    kept = (slot_of >= 0)
+    rows = jnp.take(y, jnp.maximum(slot_of, 0).reshape(-1), axis=0)
+    rows = rows.reshape(n, cfg.top_k, d)
+    w = topk_w * kept.astype(topk_w.dtype)
+    out = jnp.einsum("nk,nkd->nd", w, rows)
+    return logical.constrain(out, ("batch", None)), aux
+
+
+def moe_apply(params, x, cfg: MoEConfig):
+    """Full MoE layer: routed experts (grouped dispatch over the whole
+    padded expert range, expert-parallel under a mesh binding) plus the
+    always-on shared expert.  x: [N, d] -> ([N, d], aux_loss)."""
+    out, aux = moe_apply_grouped(params, x, cfg)
+    if cfg.n_shared:
+        out = out + apply_swiglu(params["shared"], x)
+    return logical.constrain(out, ("batch", None)), aux

@@ -1,0 +1,147 @@
+"""Sharding policy: logical-axis rules and parameter/optimizer spec trees.
+
+One place encodes how each :class:`~repro.common.types.ArchKind` maps onto
+the production meshes (``("data", "model")`` single pod, ``("pod", "data",
+"model")`` multi-pod):
+
+- LMs run 2D data x tensor parallelism (Megatron layout): attention heads
+  and FFN width column-sharded, output projections row-sharded, the
+  vocabulary dimension (embed table rows / lm_head columns) sharded for the
+  vocab-parallel CE loss, and MoE expert stacks sharded over the model axis
+  (expert parallelism).
+- RecSys shards only the combined embedding table row-wise over the model
+  axis (the multi-GB SparseNet); the small dense MLPs replicate.
+- GNNs replicate parameters and shard the graph (nodes/edges) over every
+  mesh axis — vertex-partition data parallelism.
+
+Parameter specs name only the "model" axis, so the same spec tree is valid
+on both mesh shapes; data/pod axes shard activations, never weights.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.common.types import ArchKind
+
+
+def logical_rules(kind: ArchKind, multi_pod: bool = False) -> dict:
+    """Logical axis name -> mesh axis binding for one architecture family."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    rules = {
+        "batch": dp,
+        "model": "model",
+    }
+    if kind in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+        rules.update(
+            seq=None,            # sequence replicated (residual_seq opts in)
+            residual_seq=None,   # bound to "model" by seq_shard configs
+            embed=None,
+            heads="model",
+            kv_heads="model",
+            ffn="model",
+            vocab="model",
+            expert="model",
+        )
+    elif kind == ArchKind.GNN:
+        # vertex/edge partition spreads the graph over the whole mesh
+        rules["nodes"] = dp + ("model",)
+    return rules
+
+
+def _path_names(path) -> list[str]:
+    return [k.key for k in path if hasattr(k, "key")]
+
+
+def _spec(lead: int, ndim: int, shard_dim: int) -> P:
+    """P with ``lead`` stacked-layer Nones, "model" at ``shard_dim`` of the
+    per-layer shape, None elsewhere."""
+    axes = [None] * ndim
+    axes[lead + shard_dim] = "model"
+    return P(*axes)
+
+
+def _replicated(ndim: int) -> P:
+    return P(*([None] * ndim))
+
+
+def _lm_leaf_spec(names: list[str], ndim: int) -> P:
+    last = names[-1] if names else ""
+    # per-layer params are stacked on a leading L axis under "blocks"
+    lead = 1 if "blocks" in names else 0
+    if last == "embed":
+        return P("model", None)           # vocab-row sharded
+    if last == "lm_head":
+        return P(None, "model")           # vocab-column sharded
+    if "experts" in names:
+        return _spec(lead, ndim, 0)       # [L, E, ...]: expert parallel
+    if last == "router":
+        return _replicated(ndim)          # tiny; replicate for exact routing
+    if last in ("wq", "wk", "wv", "bq", "bk", "bv"):
+        return _spec(lead, ndim, ndim - lead - 1)  # heads column-sharded
+    if last == "wo":
+        return _spec(lead, ndim, 0)       # row-sharded (psum on output)
+    if last in ("w_gate", "w_up"):
+        return _spec(lead, ndim, ndim - lead - 1)  # ffn column-sharded
+    if last == "w_down":
+        return _spec(lead, ndim, 0)       # ffn row-sharded
+    return _replicated(ndim)              # norms, biases
+
+
+def _recsys_leaf_spec(names: list[str], ndim: int) -> P:
+    # the combined embedding table (and its hot/cold split) row-shards over
+    # the model axis; everything dense replicates
+    if names and names[-1] in ("table", "hot", "cold") and ndim == 2:
+        return P("model", None)
+    return _replicated(ndim)
+
+
+def param_spec_tree(kind: ArchKind, params):
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs)."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        if kind in (ArchKind.LM_DENSE, ArchKind.LM_MOE):
+            return _lm_leaf_spec(names, ndim)
+        if kind == ArchKind.RECSYS:
+            return _recsys_leaf_spec(names, ndim)
+        return _replicated(ndim)          # GNN: pure data parallel
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def opt_spec_tree(kind: ArchKind, opt_state, param_specs):
+    """PartitionSpec pytree for an optimizer state.
+
+    Optimizer accumulators mirror the parameter tree ("m"/"v"/"mu"/"acc"
+    sub-trees) and inherit each parameter's spec; row-wise accumulators
+    ([rows, 1] for a [rows, dim] table) keep the row sharding because the
+    spec is positional.  Scalar counters ("step") replicate.
+    """
+    spec_leaves = jax.tree_util.tree_leaves(
+        param_specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+    def mirrored(sub):
+        leaves, treedef = jax.tree_util.tree_flatten(sub)
+        if len(leaves) != len(spec_leaves):
+            # structure diverged from params: replicate conservatively
+            fitted = [_replicated(len(l.shape)) for l in leaves]
+        else:
+            fitted = [
+                s if len(s) == len(l.shape) else _replicated(len(l.shape))
+                for l, s in zip(leaves, spec_leaves)
+            ]
+        return jax.tree_util.tree_unflatten(treedef, fitted)
+
+    out = {}
+    for name, sub in opt_state.items():
+        sub_leaves = jax.tree_util.tree_leaves(sub)
+        if not sub_leaves:
+            out[name] = sub                      # e.g. momentum-less sgd {}
+        elif len(sub_leaves) == 1 and not len(sub_leaves[0].shape):
+            out[name] = P()                      # scalar step counter
+        else:
+            out[name] = mirrored(sub)
+    return out

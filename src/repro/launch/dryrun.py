@@ -134,7 +134,8 @@ def run_cell_dryrun(arch_id: str, shape_name: str, mesh_kind: str,
             "output_size_bytes": mem.output_size_in_bytes,
             "temp_size_bytes": mem.temp_size_in_bytes,
             "alias_size_bytes": mem.alias_size_in_bytes,
-            "peak_memory_bytes": mem.peak_memory_in_bytes,
+            # absent on the CPU backend's CompiledMemoryStats
+            "peak_memory_bytes": getattr(mem, "peak_memory_in_bytes", None),
             "generated_code_size_bytes": mem.generated_code_size_in_bytes,
         },
         # roofline terms (seconds) per §Roofline

@@ -4,7 +4,22 @@ Includes the paper's qualitative claims as assertions (Fig. 4/6/8) and
 hypothesis property tests on the provisioning invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep (requirements-dev.txt): skip ONLY the
+    # property tests, keep the plain assertions running
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
 
 from repro.configs.paper_models import paper_profile
 from repro.core.baselines import baymax_qps, deeprecsys_qps
