@@ -1,20 +1,39 @@
-"""Paper Fig. 11/12 + Algorithm 1: gradient-based search vs exhaustive.
+"""Paper Fig. 11/12 + Algorithm 1: gradient-based search vs exhaustive,
+plus the engine before/after comparison (``BENCH_search.json``).
 
 Verifies the convexity-exploiting walk finds (near-)optimal configs while
-visiting a fraction of P(M+D+O)."""
+visiting a fraction of P(M+D+O), and measures the vectorized engine + CRN
+rate-sweep speedup against the retained reference path (the pre-refactor
+per-sub-query heapq loops).
+
+CLI:
+  (default)              gradient vs exhaustive CSV rows (fast engine)
+  --smoke                CI perf-smoke subset under a wall-clock budget
+  --compare-reference    fast vs reference engine -> BENCH_search.json
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
 
 from benchmarks.common import emit, query_sizes, timer
 from repro.configs.paper_models import paper_profile
 from repro.core.devices import SERVER_TYPES
 from repro.core.gradient_search import BATCH_GRID, _mk_sched, gradient_search
 from repro.core.partition import enumerate_placements
-from repro.serving.simulator import max_sustainable_qps
+from repro.serving.simulator import SimCache, max_sustainable_qps
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+CASES = (("dlrm-rmc1", "T2"), ("dlrm-rmc3", "T7"))
+O_GRID = (1, 2, 4)
 
 
-def exhaustive(prof, dev, sizes, o_grid=(1, 2, 4)):
+def exhaustive(prof, dev, sizes, o_grid=O_GRID, engine="fast"):
     best = 0.0
     evals = 0
+    cache = SimCache(sizes, 0)
     for pl in enumerate_placements(prof, dev):
         grid = o_grid if pl.plan.startswith("cpu") else (1,)
         for o in grid:
@@ -26,19 +45,21 @@ def exhaustive(prof, dev, sizes, o_grid=(1, 2, 4)):
                     if sched is None:
                         continue
                     qps, _ = max_sustainable_qps(pl, dev, sched, prof.sla_ms,
-                                                 sizes)
+                                                 sizes, cache=cache,
+                                                 engine=engine)
                     evals += 1
                     best = max(best, qps)
     return best, evals
 
 
-def run():
+def run(smoke: bool = False):
     sizes = query_sizes(300)
-    for model, server in [("dlrm-rmc1", "T2"), ("dlrm-rmc3", "T7")]:
+    cases = CASES[:1] if smoke else CASES
+    for model, server in cases:
         prof = paper_profile(model)
         dev = SERVER_TYPES[server]
         with timer() as t:
-            res = gradient_search(prof, dev, sizes, o_grid=(1, 2, 4))
+            res = gradient_search(prof, dev, sizes, o_grid=O_GRID)
         with timer() as t_ex:
             best, ex_evals = exhaustive(prof, dev, sizes)
         gap = res.qps / max(best, 1e-9)
@@ -48,5 +69,70 @@ def run():
              f"search_speedup={t_ex.us/max(t.us,1):.1f}x")
 
 
+def compare_reference(out: str = "BENCH_search.json"):
+    """Fast vs reference engine, end to end, same host/process: wall time,
+    per-config qps agreement, and argmax identity per (workload, server)."""
+    sizes = query_sizes(300)
+    rows = []
+    for model, server in CASES:
+        prof = paper_profile(model)
+        dev = SERVER_TYPES[server]
+        with timer() as t_ref:
+            r_ref = gradient_search(prof, dev, sizes, o_grid=O_GRID,
+                                    engine="reference")
+        with timer() as t_fast:
+            r_fast = gradient_search(prof, dev, sizes, o_grid=O_GRID,
+                                     engine="fast")
+        key = lambda r: (r.placement.plan, r.sched.m, r.sched.batch, r.sched.o)
+        rows.append({
+            "workload": model,
+            "server": server,
+            "reference_s": t_ref.us / 1e6,
+            "fast_s": t_fast.us / 1e6,
+            "speedup": t_ref.us / max(t_fast.us, 1),
+            "qps_reference": r_ref.qps,
+            "qps_fast": r_fast.qps,
+            "qps_rel_err": abs(r_fast.qps - r_ref.qps) / max(r_ref.qps, 1e-9),
+            "argmax_reference": key(r_ref),
+            "argmax_fast": key(r_fast),
+            "same_argmax": key(r_ref) == key(r_fast),
+            "evals": r_fast.evals,
+        })
+        print(f"{model}/{server}: reference {rows[-1]['reference_s']:.1f}s -> "
+              f"fast {rows[-1]['fast_s']:.1f}s "
+              f"({rows[-1]['speedup']:.1f}x, qps_rel_err "
+              f"{rows[-1]['qps_rel_err']:.2e}, same_argmax "
+              f"{rows[-1]['same_argmax']})", flush=True)
+    total_ref = sum(r["reference_s"] for r in rows)
+    total_fast = sum(r["fast_s"] for r in rows)
+    blob = {
+        "benchmark": "gradient_search end-to-end (o_grid=(1,2,4), 300 sizes)",
+        "host": platform.processor() or platform.machine(),
+        "cases": rows,
+        "total_reference_s": total_ref,
+        "total_fast_s": total_fast,
+        "total_speedup": total_ref / max(total_fast, 1e-9),
+    }
+    path = REPO / out
+    path.write_text(json.dumps(blob, indent=1))
+    print(f"total: {total_ref:.1f}s -> {total_fast:.1f}s "
+          f"({blob['total_speedup']:.1f}x) -> {path}")
+    return blob
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI perf smoke: first case only, fast engine")
+    ap.add_argument("--compare-reference", action="store_true",
+                    help="measure fast vs reference engine -> BENCH_search.json")
+    args = ap.parse_args()
+    if args.compare_reference:
+        compare_reference()
+    else:
+        print("name,us_per_call,derived")
+        run(smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

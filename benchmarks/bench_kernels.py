@@ -15,8 +15,11 @@ from repro.kernels.flash_attention.ref import attention_ref
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    warm = fn(*args)  # single warmup call (compile), reused for the sync
+    if isinstance(warm, tuple):
+        warm[0].block_until_ready()
+    else:
+        jax.block_until_ready(warm)
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)

@@ -13,7 +13,10 @@ from repro.serving.diurnal import diurnal_trace, load_increment_rate
 
 def main():
     profiles = {n: paper_profile(n) for n in PAPER_MODELS}
-    table, _ = build_table(profiles)  # cached offline-profiling artifact
+    # Profiled (workload, server) cells persist under artifacts/profiles/;
+    # the first run searches every cell (fast engine), reruns replay from
+    # disk (see README "Offline profiling" for the key schema).
+    table, _ = build_table(profiles, verbose=True)
     M = len(table.workloads)
     cap = (table.avail[:, None] * table.qps).sum(axis=0)
     traces = np.stack([diurnal_trace(0.15 * cap[m], seed=m, n_steps=96)

@@ -21,6 +21,9 @@ def main():
     sizes = np.clip(rng.lognormal(np.log(64), 1.1, 400).astype(np.int64), 1, 1024)
 
     # ---- stage 1: offline profiling -------------------------------------
+    # every evaluation below runs the vectorized simulator engine with one
+    # shared CRN cache per search (engine="reference" replays the original
+    # per-sub-query heap loops ~10x slower, bit-for-bit compatible results)
     print("== offline profiling (Algorithm 1) ==")
     prof = paper_profile("dlrm-rmc1")
     tuples = {}

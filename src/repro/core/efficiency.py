@@ -7,8 +7,12 @@ peak power envelope (what the datacenter must budget when the server is
 activated), while the measured average power at peak QPS is kept for the
 energy-efficiency (QPS/W) rankings of Fig. 15.
 
-Profiling one pair takes seconds-to-a-minute of simulation, so results are
-cached as JSON under ``artifacts/``; benchmarks re-read them.
+Profiled pairs persist through :mod:`repro.core.profile_cache`
+(``artifacts/profiles/*.json``, keyed by workload/server fingerprints,
+seed, grids and the query-size sample), so cluster provisioning, examples
+and benchmarks re-search a cell only when something that affects its
+result changed; ``build_table(cache=False)`` forces recomputation and
+``profile_cache.invalidate()`` clears the store.
 """
 from __future__ import annotations
 
@@ -18,9 +22,10 @@ import pathlib
 
 import numpy as np
 
+from repro.core import profile_cache
 from repro.core.cluster import EfficiencyTable
 from repro.core.devices import DEFAULT_AVAILABILITY, SERVER_TYPES, DeviceProfile
-from repro.core.gradient_search import SearchResult, gradient_search
+from repro.core.gradient_search import BATCH_GRID, SearchResult, gradient_search
 from repro.core.workload import ModelProfile
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
@@ -50,49 +55,65 @@ class ProfiledPair:
 
 
 def profile_pair(profile: ModelProfile, device: DeviceProfile,
-                 query_sizes: np.ndarray | None = None, seed: int = 0) -> ProfiledPair:
+                 query_sizes: np.ndarray | None = None, seed: int = 0,
+                 engine: str = "fast", use_cache: bool = True,
+                 o_grid: tuple[int, ...] | None = None) -> ProfiledPair:
     qs = query_sizes if query_sizes is not None else default_query_sizes()
-    r: SearchResult = gradient_search(profile, device, qs, seed=seed)
+    key = None
+    if use_cache:
+        key = profile_cache.pair_key("hercules", profile, device, qs,
+                                     seed=seed, o_grid=o_grid,
+                                     batch_grid=BATCH_GRID)
+        rec = profile_cache.load("hercules", profile.name, device.name, key)
+        if rec is not None:
+            return ProfiledPair(**rec)
+    r: SearchResult = gradient_search(profile, device, qs, seed=seed,
+                                      o_grid=o_grid, engine=engine)
     s = r.sched
-    return ProfiledPair(
+    pair = ProfiledPair(
         workload=profile.name, server=device.name, qps=r.qps,
         avg_power_w=r.power_w, provisioned_power_w=device.peak_power_w,
         plan=r.placement.plan, m=s.m, d=s.batch, o=s.o, sd_sparse=s.sd_sparse,
         p95_ms=r.p95_ms, evals=r.evals, space_size=r.space_size,
     )
+    if use_cache:
+        profile_cache.store("hercules", profile.name, device.name, key,
+                            dataclasses.asdict(pair))
+    return pair
 
 
 def build_table(
     profiles: dict[str, ModelProfile],
     servers: dict[str, DeviceProfile] | None = None,
     availability: dict[str, int] | None = None,
-    cache: str | None = "efficiency_table.json",
+    cache: bool | str = True,
     query_sizes: np.ndarray | None = None,
     verbose: bool = False,
+    seed: int = 0,
+    engine: str = "fast",
 ) -> tuple[EfficiencyTable, dict]:
-    """Profile all pairs (cached); returns the table + raw pair records."""
+    """Profile all pairs (cached per pair); returns the table + raw records.
+
+    ``cache``: truthy -> hit/update the persistent per-pair profile cache;
+    a string additionally writes the aggregate records to
+    ``artifacts/<cache>`` for inspection (legacy location).
+    """
     servers = servers or SERVER_TYPES
     availability = availability or DEFAULT_AVAILABILITY
-    cache_path = ARTIFACTS / cache if cache else None
+    qs = query_sizes if query_sizes is not None else default_query_sizes()
     records: dict[str, dict] = {}
-    if cache_path and cache_path.exists():
-        records = json.loads(cache_path.read_text())
-
-    changed = False
     for wname, prof in profiles.items():
         for sname, dev in servers.items():
-            key = f"{wname}|{sname}"
-            if key in records:
-                continue
-            pair = profile_pair(prof, dev, query_sizes)
-            records[key] = dataclasses.asdict(pair)
-            changed = True
+            pair = profile_pair(prof, dev, qs, seed=seed, engine=engine,
+                                use_cache=bool(cache))
+            records[f"{wname}|{sname}"] = dataclasses.asdict(pair)
             if verbose:
-                print(f"profiled {key}: qps={pair.qps:.0f} plan={pair.plan}",
-                      flush=True)
-    if cache_path and changed:
-        cache_path.parent.mkdir(parents=True, exist_ok=True)
-        cache_path.write_text(json.dumps(records, indent=1))
+                print(f"profiled {wname}|{sname}: qps={pair.qps:.0f} "
+                      f"plan={pair.plan}", flush=True)
+    if isinstance(cache, str):
+        agg = ARTIFACTS / cache
+        agg.parent.mkdir(parents=True, exist_ok=True)
+        agg.write_text(json.dumps(records, indent=1))
 
     snames = list(servers)
     wnames = list(profiles)

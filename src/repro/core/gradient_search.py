@@ -2,16 +2,21 @@
 
 Explores P(M+D+O) for every feasible partition plan of a (workload, server)
 pair. Exploiting the convexity of the P(M+D) throughput surface, the walk
-starts at the minimal (m, d) corner and repeatedly evaluates three
-candidates — grow m, grow d, grow both — moving to the best QPS improvement
-that still meets the SLA latency and provisioned-power constraints; it
-terminates when all three regress. The outer loop sweeps op-parallelism o
-and stops when the per-o peak starts decreasing (paper's early stop).
+starts at the minimal (m, d) corner and repeatedly evaluates the three-
+candidate frontier — grow m, grow d, grow both — moving to the best QPS
+improvement that still meets the SLA latency and provisioned-power
+constraints; it terminates when all three regress. The outer loop sweeps
+op-parallelism o and stops when the per-o peak starts decreasing (paper's
+early stop).
 
 Every evaluation is a latency-bounded-throughput measurement from the
 discrete-event simulator; evaluations are memoized, and the search reports
 how much of the exhaustive space it visited (the paper's search-efficiency
-claim).
+claim).  All evaluations of one search — the frontier candidates of every
+step, every o, every plan, and every bisection probe inside them — run
+through one shared :class:`~repro.serving.simulator.SimCache`, so arrival
+streams (common random numbers), query splits and duration tables are
+computed once per (workload, server) pair instead of once per probe.
 """
 from __future__ import annotations
 
@@ -22,7 +27,12 @@ import numpy as np
 from repro.core.devices import DeviceProfile
 from repro.core.partition import Placement, enumerate_placements
 from repro.core.workload import ModelProfile
-from repro.serving.simulator import SchedConfig, SimResult, max_sustainable_qps
+from repro.serving.simulator import (
+    SchedConfig,
+    SimCache,
+    SimResult,
+    max_sustainable_qps,
+)
 
 BATCH_GRID = (32, 64, 128, 256, 512, 1024)
 
@@ -76,41 +86,54 @@ def gradient_search(
     power_budget_w: float | None = None,
     seed: int = 0,
     o_grid: tuple[int, ...] | None = None,
+    engine: str = "fast",
+    cache: SimCache | None = None,
+    qps_tol: float = 0.0,
 ) -> SearchResult:
     sla = profile.sla_ms
-    cache: dict[tuple, tuple[float, SimResult | None]] = {}
+    if cache is None:
+        cache = SimCache(query_sizes, seed)
+    memo: dict[tuple, tuple[float, SimResult | None]] = {}
     trajectory: list = []
 
     def evaluate(pl: Placement, m: int, di: int, o: int):
         key = (pl.plan, m, di, o)
-        if key in cache:
-            return cache[key]
+        if key in memo:
+            return memo[key]
         sched = _mk_sched(pl.plan, device, m, BATCH_GRID[di], o)
         if sched is None:
-            cache[key] = (0.0, None)
-            return cache[key]
+            memo[key] = (0.0, None)
+            return memo[key]
         qps, res = max_sustainable_qps(
-            pl, device, sched, sla, query_sizes, power_budget_w, seed
+            pl, device, sched, sla, query_sizes, power_budget_w, seed,
+            cache=cache, engine=engine, qps_tol=qps_tol,
         )
-        cache[key] = (qps, res)
+        memo[key] = (qps, res)
         trajectory.append((pl.plan, m, BATCH_GRID[di], o, qps))
-        return cache[key]
+        return memo[key]
+
+    def evaluate_frontier(pl: Placement, cands, o: int):
+        """Evaluate a frontier of (m, d-index) candidates through the shared
+        engine context (one SimCache: common arrival streams, splits and
+        duration tables across all of them) and return the best feasible."""
+        best = None
+        for cm, cd in cands:
+            if cd >= len(BATCH_GRID):
+                continue
+            cq, cr = evaluate(pl, cm, cd, o)
+            if cr is None:
+                continue
+            if best is None or cq > best[0]:
+                best = (cq, cr, cm, cd)
+        return best
 
     def md_walk(pl: Placement, o: int):
         """Gradient walk over the (m, d) grid for one op-parallelism."""
         m, di = 1, 0
         qps, res = evaluate(pl, m, di, o)
         while True:
-            cands = [(m + 1, di), (m, di + 1), (m + 1, di + 1)]
-            best = None
-            for cm, cd in cands:
-                if cd >= len(BATCH_GRID):
-                    continue
-                cq, cr = evaluate(pl, cm, cd, o)
-                if cr is None:
-                    continue
-                if best is None or cq > best[0]:
-                    best = (cq, cr, cm, cd)
+            best = evaluate_frontier(
+                pl, [(m + 1, di), (m, di + 1), (m + 1, di + 1)], o)
             if best is None or best[0] <= qps:
                 return qps, res, m, di
             qps, res, m, di = best
@@ -148,7 +171,7 @@ def gradient_search(
                             enumerate_placements(profile, device)[0],
                             SchedConfig(batch=8, m=1), 0.0,
                             device.idle_power_w, float("inf"), 0, 0, [])
-    best.evals = len(cache)
+    best.evals = len(memo)
     best.space_size = max(space_size, 1)
     best.trajectory = trajectory
     return best

@@ -1,2 +1,11 @@
 """Serving substrate: query generation, batching/fusion, the discrete-event
-server simulator, diurnal load traces, and the serve driver."""
+server simulator (vectorized engine + reference path), diurnal load traces,
+and the serve driver."""
+from repro.serving.simulator import (  # noqa: F401
+    SchedConfig,
+    SimCache,
+    SimResult,
+    max_sustainable_qps,
+    simulate,
+    simulate_rates,
+)

@@ -1,0 +1,195 @@
+"""Equivalence tests: vectorized engine + fast simulator paths vs the
+retained reference heap loops, across all three plan families, seeds and
+edge cases (d=1 queues, single thread, burst arrivals, zero-size queries).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep (requirements-dev.txt): skip ONLY the
+    # property tests, keep the plain assertions running
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro.configs.paper_models import paper_profile
+from repro.core.devices import SERVER_TYPES
+from repro.core.partition import enumerate_placements
+from repro.serving.engine import fifo_finish
+from repro.serving.simulator import (
+    SchedConfig,
+    SimCache,
+    _sized_queries,
+    _split_queries,
+    max_sustainable_qps,
+    simulate,
+    simulate_rates,
+)
+
+
+def qsizes(n=150, seed=0):
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+def _cases():
+    """(profile, device, placement, sched) across all plan families."""
+    out = []
+    p1, d2 = paper_profile("dlrm-rmc1"), SERVER_TYPES["T2"]
+    p3, d7 = paper_profile("dlrm-rmc3"), SERVER_TYPES["T7"]
+    scheds = {
+        "cpu_model": [SchedConfig(64, 10, 2), SchedConfig(32, 1, 1),
+                      SchedConfig(1024, 20, 1)],
+        "cpu_sd": [SchedConfig(64, 10, 2, sd_sparse=5),
+                   SchedConfig(256, 4, 1, sd_sparse=16)],
+        "accel": [SchedConfig(256, 4, 1), SchedConfig(64, 1, 2, fuse=False),
+                  SchedConfig(1024, 8, 1)],
+    }
+    for prof, dev in ((p1, d2), (p3, d7)):
+        for pl in enumerate_placements(prof, dev):
+            for sched in scheds.get(pl.plan, scheds["accel"]):
+                out.append((prof, dev, pl, sched))
+    return out
+
+
+CASES = _cases()
+
+
+class TestFifoFinish:
+    def test_matches_reference_across_regimes(self):
+        rng = np.random.default_rng(0)
+        for trial in range(60):
+            n = int(rng.integers(1, 300))
+            k = int(rng.integers(1, 12))
+            ready = np.sort(rng.exponential(1.0, n).cumsum()
+                            * rng.uniform(0.001, 1.0))
+            if trial % 3 == 0:  # unsorted ready (the S-D dense stage)
+                ready = rng.permutation(ready)
+            if trial % 5 == 0:  # constant service times
+                dur = np.full(n, float(rng.uniform(0.01, 2.0)))
+            else:
+                dur = rng.choice(
+                    rng.uniform(0.01, 2.0, int(rng.integers(1, 8))), n)
+            ref = fifo_finish(ready, dur, k, slow=True)
+            fast = fifo_finish(ready, dur, k)
+            assert np.allclose(ref, fast, rtol=1e-9, atol=1e-9), (trial, n, k)
+
+    def test_burst_arrivals(self):
+        # all jobs arrive at once: k servers drain them in FIFO order
+        ready = np.zeros(10)
+        dur = np.linspace(0.1, 1.0, 10)
+        for k in (1, 3, 10, 20):
+            ref = fifo_finish(ready, dur, k, slow=True)
+            assert np.allclose(fifo_finish(ready, dur, k), ref,
+                               rtol=1e-12, atol=1e-12)
+
+    def test_single_server_is_lindley(self):
+        ready = np.array([0.0, 0.1, 0.15, 5.0])
+        dur = np.array([1.0, 0.2, 0.2, 0.1])
+        want = np.array([1.0, 1.2, 1.4, 5.1])
+        assert np.allclose(fifo_finish(ready, dur, 1), want)
+        assert np.allclose(fifo_finish(ready, dur, 1, slow=True), want)
+
+    def test_idle_servers_and_empty(self):
+        ready = np.array([0.5, 0.6])
+        dur = np.array([1.0, 1.0])
+        assert np.allclose(fifo_finish(ready, dur, 5), ready + dur)
+        assert fifo_finish(np.zeros(0), np.zeros(0), 3).shape == (0,)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(1, 120),
+           k=st.integers(1, 9), distinct=st.integers(1, 6))
+    def test_property_matches_reference(self, seed, n, k, distinct):
+        rng = np.random.default_rng(seed)
+        ready = rng.exponential(0.3, n).cumsum()
+        dur = rng.choice(rng.uniform(0.01, 1.0, distinct), n)
+        assert np.allclose(fifo_finish(ready, dur, k),
+                           fifo_finish(ready, dur, k, slow=True),
+                           rtol=1e-9, atol=1e-9)
+
+
+class TestSimulatorEquivalence:
+    @pytest.mark.parametrize(
+        "case", CASES,
+        ids=[f"{c[2].plan}-m{c[3].m}d{c[3].batch}o{c[3].o}" for c in CASES])
+    def test_simulate_fast_matches_reference(self, case):
+        prof, dev, pl, sched = case
+        for rate in (300.0, 4000.0):
+            qs = _sized_queries(qsizes(), rate, prof.sla_ms, 0)
+            ref = simulate(pl, dev, sched, rate, qs, 0, engine="reference")
+            fast = simulate(pl, dev, sched, rate, qs, 0, engine="fast")
+            for f in ("qps", "p50_ms", "p95_ms", "p99_ms", "avg_power_w"):
+                a, b = getattr(ref, f), getattr(fast, f)
+                assert abs(a - b) <= 1e-6 * max(abs(a), 1e-9), (f, a, b)
+            for u in ref.utils:
+                assert abs(ref.utils[u] - fast.utils[u]) < 1e-6
+
+    def test_max_sustainable_qps_engines_agree(self):
+        sizes = qsizes()
+        for prof, dev, pl, sched in CASES[::3]:
+            q_ref, _ = max_sustainable_qps(pl, dev, sched, prof.sla_ms, sizes,
+                                           engine="reference")
+            q_fast, _ = max_sustainable_qps(pl, dev, sched, prof.sla_ms, sizes,
+                                            engine="fast")
+            assert abs(q_fast - q_ref) <= 1e-6 * max(q_ref, 1e-9)
+
+    def test_simulate_rates_matches_per_rate_simulate(self):
+        """The CRN sweep reproduces standalone simulate() at every rate
+        (prefix property of the shared gap/size streams)."""
+        prof, dev, pl, sched = CASES[0]
+        rates = [150.0, 900.0, 2700.0]
+        cache = SimCache(qsizes(), 0)
+        swept = simulate_rates(pl, dev, sched, rates, prof.sla_ms, qsizes(),
+                               seed=0, cache=cache)
+        for rate, r in zip(rates, swept):
+            qs = _sized_queries(qsizes(), rate, prof.sla_ms, 0)
+            solo = simulate(pl, dev, sched, rate, qs, 0)
+            assert abs(r.qps - solo.qps) <= 1e-9 * solo.qps
+            assert abs(r.p95_ms - solo.p95_ms) <= 1e-9 * max(solo.p95_ms, 1e-9)
+
+    def test_qps_tol_early_stop_bounded_error(self):
+        prof, dev, pl, sched = CASES[0]
+        sizes = qsizes()
+        q_exact, _ = max_sustainable_qps(pl, dev, sched, prof.sla_ms, sizes)
+        q_tol, _ = max_sustainable_qps(pl, dev, sched, prof.sla_ms, sizes,
+                                       qps_tol=0.05)
+        assert q_tol <= q_exact + 1e-9
+        assert q_tol >= q_exact * 0.90
+
+
+class TestZeroSizeQueries:
+    def test_split_guard(self):
+        sizes = np.array([0, 100, 0, 65, 0])
+        arrivals = np.linspace(0.0, 1.0, 5)
+        sub_a, sub_s, qid = _split_queries(sizes, arrivals, 64)
+        assert qid.tolist() == [1, 1, 3, 3]
+        assert sub_s.tolist() == [64, 36, 64, 1]  # no remainder corruption
+        assert (sub_s > 0).all()
+
+    @pytest.mark.parametrize("engine", ["fast", "reference"])
+    def test_no_negative_latency(self, engine):
+        prof, dev, pl, sched = CASES[0]
+        sizes = qsizes(80)
+        sizes[::7] = 0  # zero-size queries finish at their arrival
+        r = simulate(pl, dev, sched, 500.0, sizes, 0, engine=engine)
+        assert r.qps > 0
+        # p50/p95 computed over non-negative latencies only
+        assert r.p50_ms >= 0.0
+
+    def test_engines_agree_with_zero_sizes(self):
+        prof, dev, pl, sched = CASES[0]
+        sizes = qsizes(80)
+        sizes[::5] = 0
+        ref = simulate(pl, dev, sched, 800.0, sizes, 0, engine="reference")
+        fast = simulate(pl, dev, sched, 800.0, sizes, 0, engine="fast")
+        assert abs(ref.p95_ms - fast.p95_ms) <= 1e-6 * max(ref.p95_ms, 1e-9)
+        assert abs(ref.qps - fast.qps) <= 1e-6 * ref.qps

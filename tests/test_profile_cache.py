@@ -1,0 +1,91 @@
+"""Persistent offline-profiling cache: correctness and the warm-build
+speedup contract (a cache-hit table build must be >= 10x faster than the
+cold build it replays)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import paper_profile
+from repro.core import profile_cache
+from repro.core.baselines import deeprecsys_qps
+from repro.core.devices import SERVER_TYPES
+from repro.core.efficiency import build_table, profile_pair
+
+
+def qsizes(n=120, seed=0):
+    r = np.random.default_rng(seed)
+    return np.clip(r.lognormal(np.log(64), 1.1, n).astype(np.int64), 1, 1024)
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(profile_cache, "PROFILE_DIR", tmp_path)
+    return tmp_path
+
+
+class TestKeying:
+    def test_key_covers_inputs(self):
+        prof = paper_profile("dlrm-rmc1")
+        dev = SERVER_TYPES["T2"]
+        base = profile_cache.pair_key("hercules", prof, dev, qsizes(), seed=0)
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(), seed=0) == base
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(), seed=1) != base
+        assert profile_cache.pair_key("baymax", prof, dev, qsizes(), seed=0) != base
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(seed=2),
+                                      seed=0) != base
+        assert profile_cache.pair_key("hercules", prof,
+                                      SERVER_TYPES["T3"], qsizes(), seed=0) != base
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(),
+                                      o_grid=(1, 2), seed=0) != base
+
+    def test_load_rejects_stale_and_corrupt(self, cache_dir):
+        p = profile_cache.store("hercules", "w", "s", "k" * 40, {"qps": 1.0})
+        assert profile_cache.load("hercules", "w", "s", "k" * 40) == {"qps": 1.0}
+        # wrong key (truncated-filename collision) -> miss
+        assert profile_cache.load("hercules", "w", "s", "k" * 39 + "x") is None
+        p.write_text("{not json")
+        assert profile_cache.load("hercules", "w", "s", "k" * 40) is None
+
+    def test_invalidate_subsets(self, cache_dir):
+        profile_cache.store("hercules", "w1", "s1", "a" * 40, {})
+        profile_cache.store("hercules", "w2", "s1", "b" * 40, {})
+        assert profile_cache.invalidate(workload="w1") == 1
+        assert profile_cache.invalidate() == 1
+
+
+class TestWarmBuilds:
+    def test_profile_pair_roundtrip(self, cache_dir):
+        prof = paper_profile("dlrm-rmc1")
+        dev = SERVER_TYPES["T2"]
+        qs = qsizes()
+        cold = profile_pair(prof, dev, qs, o_grid=(1, 2))
+        assert len(list(cache_dir.glob("*.json"))) == 1
+        warm = profile_pair(prof, dev, qs, o_grid=(1, 2))
+        assert warm == cold  # identical record replayed from disk
+
+    def test_warm_table_build_10x_faster(self, cache_dir):
+        profiles = {"dlrm-rmc1": paper_profile("dlrm-rmc1")}
+        servers = {"T2": SERVER_TYPES["T2"]}
+        avail = {"T2": 10}
+        qs = qsizes()
+        t0 = time.perf_counter()
+        table_cold, rec_cold = build_table(profiles, servers, avail,
+                                           query_sizes=qs)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        table_warm, rec_warm = build_table(profiles, servers, avail,
+                                           query_sizes=qs)
+        warm_s = time.perf_counter() - t0
+        assert rec_warm == rec_cold
+        assert np.array_equal(table_warm.qps, table_cold.qps)
+        assert warm_s < cold_s / 10, (cold_s, warm_s)
+
+    def test_baseline_cache_roundtrip(self, cache_dir):
+        prof = paper_profile("dlrm-rmc1")
+        dev = SERVER_TYPES["T2"]
+        qs = qsizes()
+        q1, s1, p1 = deeprecsys_qps(prof, dev, qs, use_cache=True)
+        q2, s2, p2 = deeprecsys_qps(prof, dev, qs, use_cache=True)
+        assert q1 == q2 and s1 == s2 and p1.plan == p2.plan
+        assert any("deeprecsys" in f.name for f in cache_dir.glob("*.json"))
