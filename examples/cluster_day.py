@@ -1,48 +1,77 @@
-"""Cluster-scale example: a full day of heterogeneity-aware provisioning
-with node failures injected mid-day (elastic re-provisioning).
+"""Cluster-scale example: a full day of heterogeneity-aware online serving —
+stateful provisioning with hysteresis and transition delays, routed Poisson
+query streams, and node failures injected mid-day (elastic re-provisioning
+through the router's health tracking).
 
-Run:  PYTHONPATH=src python examples/cluster_day.py
+Run:  PYTHONPATH=src python examples/cluster_day.py [--smoke]
+
+``--smoke`` profiles a reduced table (2 workloads x 3 server types, short
+day) so CI can run the full pipeline in seconds.
 """
+import argparse
+
 import numpy as np
 
 from repro.configs.paper_models import PAPER_MODELS, paper_profile
-from repro.core.cluster import EfficiencyTable, provision_hercules
+from repro.core.cluster import TransitionConfig
+from repro.core.devices import DEFAULT_AVAILABILITY, SERVER_TYPES
 from repro.core.efficiency import build_table
+from repro.serving.cluster_runtime import failure_schedule, simulate_cluster_day
 from repro.serving.diurnal import diurnal_trace, load_increment_rate
 
 
-def main():
-    profiles = {n: paper_profile(n) for n in PAPER_MODELS}
+def main(smoke: bool = False):
+    if smoke:
+        names = ("dlrm-rmc1", "dlrm-rmc3")
+        servers = {s: SERVER_TYPES[s] for s in ("T2", "T3", "T7")}
+        avail = {"T2": 70, "T3": 15, "T7": 5}
+        n_steps = 24
+    else:
+        names = tuple(PAPER_MODELS)
+        servers, avail = None, None
+        n_steps = 96
+    profiles = {n: paper_profile(n) for n in names}
     # Profiled (workload, server) cells persist under artifacts/profiles/;
     # the first run searches every cell (fast engine), reruns replay from
-    # disk (see README "Offline profiling" for the key schema).
-    table, _ = build_table(profiles, verbose=True)
+    # disk (see docs/ARCHITECTURE.md "Offline profiling").
+    table, records = build_table(profiles, servers, avail, verbose=True)
     M = len(table.workloads)
     cap = (table.avail[:, None] * table.qps).sum(axis=0)
-    traces = np.stack([diurnal_trace(0.15 * cap[m], seed=m, n_steps=96)
+    traces = np.stack([diurnal_trace(0.09 * cap[m], seed=m, n_steps=n_steps)
                        for m in range(M)])
     R = max(load_increment_rate(t) for t in traces)
 
-    avail = table.avail.copy()
-    rng = np.random.default_rng(0)
-    print("t     power(kW)  servers  event")
-    for t in range(96):
-        # inject failures: each active server type loses a machine w.p. 2%
-        event = ""
-        fail = rng.random(len(avail)) < 0.02
-        if fail.any():
-            avail = np.maximum(avail - fail.astype(np.int64), 0)
-            event = "failure: " + ",".join(
-                np.asarray(table.servers)[fail])
-        tbl = EfficiencyTable(table.servers, table.workloads, table.qps,
-                              table.power, avail)
-        r = provision_hercules(tbl, traces[:, t], overprovision=R)
-        if t % 8 == 0 or event:
-            print(f"{t:3d}   {r.provisioned_power_w/1e3:8.1f}  {r.capacity:7d}  "
-                  f"{event if r.feasible else event + ' INFEASIBLE'}")
-    print("day completed; surviving pool:",
-          dict(zip(table.servers, avail.tolist())))
+    # each server type loses a machine w.p. 2% per interval, mid-window
+    fails = failure_schedule(n_steps, len(table.servers), fail_prob=0.02,
+                             seed=0)
+    out = simulate_cluster_day(
+        table, records, profiles, traces, policy="hercules",
+        overprovision=R, transitions=TransitionConfig(), failures=fails)
+
+    print("\nt     power(kW)  servers  churn")
+    for t in range(n_steps):
+        if t % max(n_steps // 12, 1) == 0 or out["churn"][t]:
+            print(f"{t:3d}   {out['power_w'][t]/1e3:8.1f}  "
+                  f"{out['capacity'][t]:7d}  {out['churn'][t]:5d}")
+    print("\nevents:")
+    for e in out["events"]:
+        print("  ", e)
+    print(f"\nday feasible={out['feasible']}  "
+          f"peak_power={out['peak_power_w']/1e3:.1f}kW  "
+          f"resolves={out['resolves']} holds={out['holds']} "
+          f"churn={out['total_churn']}")
+    print(f"{'workload':<12} {'sla':>6} {'p99(ms)':>8} {'attain':>7} "
+          f"{'hedged':>6} {'retried':>7}")
+    for w, d in out["workloads"].items():
+        print(f"{w:<12} {d['sla_ms']:6.0f} {d['p99_ms']:8.2f} "
+              f"{d['sla_attainment']:7.4f} {d['n_hedged']:6d} "
+              f"{d['n_retried']:7d}")
+    assert out["feasible"], "day must stay feasible through failures"
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced table + short day (CI)")
+    main(**vars(ap.parse_args()))

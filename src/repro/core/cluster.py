@@ -14,7 +14,14 @@ Three provisioning policies over the workload-classification table
                  total provisioned power, then integer repair.
 
 ``provision_day`` runs a policy across a diurnal trace and reports the
-capacity (activated servers) and provisioned-power time series.
+capacity (activated servers) and provisioned-power time series.  It
+re-solves every interval statelessly; :class:`StatefulProvisioner` is the
+online form — allocations carry over between intervals, allocation deltas
+incur model-load/drain delays, a hysteresis band suppresses re-solving
+(and thrashing) while the load stays near what the fleet was sized for,
+and mid-day server failures shrink the pool and force an elastic
+re-provision (`repro.serving.cluster_runtime` drives actual query streams
+through the result).
 """
 from __future__ import annotations
 
@@ -135,6 +142,169 @@ POLICIES = {
     "greedy": provision_greedy,
     "hercules": provision_hercules,
 }
+
+
+# ---------------------------------------------------------------------------
+# stateful online provisioning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionConfig:
+    """Allocation-transition model for online (stateful) provisioning.
+
+    A newly activated server must load model weights + embedding tables
+    before it serves (``model_load_s``); a deactivated server drains its
+    in-flight/handoff traffic for ``drain_s`` while still drawing power.
+    With ``drain_s >= model_load_s`` transitions are make-before-break: the
+    outgoing servers cover the load until the incoming ones are warm.
+    ``hysteresis`` is the relative load band around the last provisioned
+    point inside which the previous allocation is held (no re-solve, no
+    churn) as long as it still covers the target.
+    """
+
+    interval_s: float = 900.0      # provisioning interval (24h / 96)
+    model_load_s: float = 120.0    # weight/table load before serving starts
+    drain_s: float = 150.0         # post-deactivation drain (power still drawn)
+    hysteresis: float = 0.10       # relative load band that holds the alloc
+
+
+@dataclasses.dataclass
+class StatefulStep:
+    """One interval of stateful provisioning."""
+
+    alloc: np.ndarray              # [H, M] serving allocation this interval
+    power_w: float                 # provisioned power incl. draining servers
+    capacity: int                  # steady-state activated servers
+    feasible: bool
+    resolved: bool                 # False = hysteresis hold (no re-solve)
+    added: np.ndarray              # [H, M] newly activated (loading) servers
+    removed: np.ndarray            # [H, M] deactivated (draining) servers
+
+    @property
+    def churn(self) -> int:
+        return int(self.added.sum() + self.removed.sum())
+
+
+class StatefulProvisioner:
+    """Online cluster provisioning with allocation state across intervals.
+
+    Differences from the stateless ``provision_day`` loop:
+
+    - the previous allocation is *held* while every workload's load stays
+      within the hysteresis band of the load it was sized for and the
+      allocation still covers the (over-provisioned) target — single-
+      interval load wiggles no longer flap servers on and off;
+    - when the policy does re-solve, the allocation delta is reported as
+      ``added``/``removed`` and charged for transitions: added servers draw
+      power immediately but only start serving after ``model_load_s``;
+      removed servers keep drawing power for ``drain_s`` while they drain;
+    - ``fail()`` removes servers from the live pool *and* from the current
+      allocation (elastic N_h), forcing a re-solve at the next step.
+    """
+
+    def __init__(self, table: EfficiencyTable, policy: str = "hercules",
+                 overprovision: float = 0.05,
+                 transitions: TransitionConfig | None = None, seed: int = 0):
+        self.table = table
+        self.policy = policy
+        self.overprovision = overprovision
+        self.transitions = transitions or TransitionConfig()
+        self.seed = seed
+        self.avail = table.avail.astype(np.int64).copy()
+        self._rng = np.random.default_rng(seed + 101)
+        H, M = table.qps.shape
+        self.alloc = np.zeros((H, M), np.int64)
+        self._provisioned_load: np.ndarray | None = None
+        self._force = True          # first step / after failure: must solve
+        self._warm = True           # day starts warm: no load delay at t=0
+        self.t = 0
+        self.n_resolves = 0
+        self.n_holds = 0
+
+    # -- failures ------------------------------------------------------------
+
+    def fail(self, h: int, count: int = 1) -> list[tuple[int, int]]:
+        """Remove up to ``count`` servers of type ``h`` from the pool.
+
+        The victim is a uniformly random machine of that type, so a serving
+        instance dies with probability ``serving / available`` (and its
+        workload is drawn proportionally to the allocation); idle spares
+        absorb the rest.  Returns the affected ``(h, m)`` cells (one entry
+        per failed *serving* instance) and forces a re-solve at the next
+        :meth:`step`.
+        """
+        victims: list[tuple[int, int]] = []
+        for _ in range(count):
+            if self.avail[h] <= 0:
+                break
+            serving = int(self.alloc[h].sum())
+            hit_serving = self._rng.random() < serving / self.avail[h]
+            self.avail[h] -= 1
+            if (hit_serving or serving > self.avail[h]) and serving > 0:
+                m = int(self._rng.choice(
+                    len(self.alloc[h]), p=self.alloc[h] / serving))
+                self.alloc[h, m] -= 1
+                victims.append((h, m))
+        self._force = True
+        return victims
+
+    # -- stepping ------------------------------------------------------------
+
+    def _covers(self, target: np.ndarray) -> bool:
+        served = (self.alloc * self.table.qps).sum(axis=0)
+        return bool((served >= target - 1e-9).all())
+
+    def _within_band(self, load: np.ndarray) -> bool:
+        if self._provisioned_load is None:
+            return False
+        ref = np.maximum(self._provisioned_load, 1e-9)
+        return bool((np.abs(load - self._provisioned_load) <=
+                     self.transitions.hysteresis * ref).all())
+
+    def _solve(self, load: np.ndarray) -> ProvisionResult:
+        table = EfficiencyTable(self.table.servers, self.table.workloads,
+                                self.table.qps, self.table.power, self.avail)
+        fn = POLICIES[self.policy]
+        kwargs: dict = {"overprovision": self.overprovision}
+        if self.policy == "nh":
+            kwargs["seed"] = self.seed + self.t
+        return fn(table, load, **kwargs)
+
+    def step(self, load: np.ndarray) -> StatefulStep:
+        load = np.asarray(load, dtype=np.float64)
+        target = load * (1.0 + self.overprovision)
+        cfg = self.transitions
+        hold = (not self._force) and self._within_band(load) and \
+            self._covers(target)
+        if hold:
+            self.n_holds += 1
+            alloc_new, feasible = self.alloc, True
+        else:
+            r = self._solve(load)
+            self.n_resolves += 1
+            if r.feasible:
+                alloc_new = r.alloc
+                self._provisioned_load = load.copy()
+            else:
+                # best effort: keep serving on whatever survives
+                alloc_new = self.alloc
+            feasible = r.feasible
+            self._force = False
+        added = np.maximum(alloc_new - self.alloc, 0)
+        removed = np.maximum(self.alloc - alloc_new, 0)
+        if self._warm:  # day starts with a warm fleet: no load transient
+            added = np.zeros_like(added)
+            self._warm = False
+        power = float((alloc_new * self.table.power).sum())
+        power += float((removed * self.table.power).sum()) * \
+            min(cfg.drain_s / cfg.interval_s, 1.0)
+        self.alloc = alloc_new
+        self.t += 1
+        return StatefulStep(
+            alloc=alloc_new.copy(), power_w=power, capacity=int(alloc_new.sum()),
+            feasible=feasible, resolved=not hold, added=added, removed=removed,
+        )
 
 
 def provision_day(

@@ -49,6 +49,8 @@ def pair_key(
     o_grid=None,
     batch_grid=None,
     power_budget_w: float | None = None,
+    qps_tol: float = 0.0,
+    engine: str = "fast",
 ) -> str:
     """Deterministic key for one profiled (workload, server) cell."""
     h = hashlib.sha1()
@@ -64,6 +66,11 @@ def pair_key(
         "batch_grid": list(batch_grid) if batch_grid else None,
         "power_budget_w": power_budget_w,
     }
+    if qps_tol:  # keep bit-exact (tol=0) keys unchanged across this addition
+        payload["qps_tol"] = float(qps_tol)
+    if engine != "fast":  # reference-engine records must never satisfy a
+        payload["engine"] = engine  # fast lookup or vice versa
+
     h.update(json.dumps(payload, sort_keys=True).encode())
     h.update(np.ascontiguousarray(np.asarray(query_sizes, np.int64)).tobytes())
     return h.hexdigest()

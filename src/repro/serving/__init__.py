@@ -1,6 +1,12 @@
 """Serving substrate: query generation, batching/fusion, the discrete-event
 server simulator (vectorized engine + reference path), diurnal load traces,
-and the serve driver."""
+the query router, and the fleet-scale cluster serving runtime."""
+from repro.serving.cluster_runtime import (  # noqa: F401
+    PairService,
+    RuntimeConfig,
+    failure_schedule,
+    simulate_cluster_day,
+)
 from repro.serving.simulator import (  # noqa: F401
     SchedConfig,
     SimCache,

@@ -1,0 +1,514 @@
+"""Fleet-scale, query-granular online serving (closing the paper's loop).
+
+``provision_day`` (stage 2, `repro.core.cluster`) trusts the efficiency
+table's QPS column: an interval is "served" if the LP covers the load with
+profiled throughput numbers.  This module validates that claim the way
+DeepRecSys and Hera do — by actually serving queries: it consumes the
+allocations of a :class:`~repro.core.cluster.StatefulProvisioner` and
+drives Poisson query streams through one
+:class:`~repro.serving.router.QueryRouter` per workload, with per-server
+behaviour reproduced from the PR-2 vectorized engine:
+
+- each allocated server instance is a router slot backed by a
+  :class:`PairService` — the (workload, server-type) pair's profiled
+  optimal placement + scheduling config, whose sub-query splits and
+  duration tables come from the shared :class:`~repro.serving.simulator.
+  SimCache` (common random numbers across intervals, slots and policies);
+- routing is the router's deterministic low-discrepancy weighted
+  assignment; newly provisioned servers join the pool only after their
+  model load completes, drained servers stop taking queries but finish
+  in-flight work (make-before-break when ``drain_s >= model_load_s``);
+- mid-day failures land *inside* the measured window: the victim's
+  unfinished queries re-dispatch to healthy slots at the detection time,
+  and the provisioner re-solves on the shrunken pool at the next interval;
+- stragglers hedge once the router's p99-based threshold trips, modelled
+  as a duplicate issued at ``arrival + threshold`` completing after the
+  best alternative slot's unloaded service time.
+
+Per interval the runtime measures a window of up to
+``queries_per_interval`` queries per workload starting at the interval
+boundary — where re-provisioning transitions bite — at the *true* arrival
+rate, so per-slot utilization matches the fleet's.  Pools start idle at
+each window (no backlog carry-over between intervals), which slightly
+flatters tails at very high utilization; the day-level p99 / SLA
+attainment aggregates every window.  See ``docs/cluster_serving.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cluster import (
+    EfficiencyTable,
+    StatefulProvisioner,
+    TransitionConfig,
+)
+from repro.core.devices import SERVER_TYPES, DeviceProfile
+from repro.core.partition import enumerate_placements
+from repro.core.perfmodel import (
+    accel_engine_time,
+    accel_link_time,
+    cpu_stage_time,
+)
+from repro.core.workload import ModelProfile
+from repro.serving.engine import fifo_finish
+from repro.serving.router import QueryRouter, ServerSlot
+from repro.serving.simulator import (
+    _PROBE_CAP,
+    SchedConfig,
+    SimCache,
+    _accel_pipeline,
+    _fusion_groups,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Knobs of the query-granular day simulation."""
+
+    queries_per_interval: int = 1500  # window cap per workload (CRN prefix)
+    hedge_quantile: float = 0.99
+    hedge_factor: float = 2.0
+    sla_quantile: float = 0.95        # "meets SLA" = this quantile <= sla_ms
+
+
+# ---------------------------------------------------------------------------
+# per-(workload, server-type) service model
+# ---------------------------------------------------------------------------
+
+
+class PairService:
+    """Query-granular service model of one (workload, server-type) pair.
+
+    Reproduces the single-server simulator's fast path on an arbitrary
+    subset of the CRN query stream: the profiled optimal placement and
+    scheduling config define the pool structure, the shared
+    :class:`SimCache` supplies sub-query splits and duration tables, and
+    the k-server FIFO recurrence / accel admission-link-engine pipeline
+    come from :mod:`repro.serving.engine` and the simulator.  ``finish``
+    on the full stream prefix is bit-identical to the engine's fast path
+    (pinned by ``tests/test_cluster_runtime.py``).
+    """
+
+    def __init__(self, profile: ModelProfile, device: DeviceProfile,
+                 record: dict, cache: SimCache):
+        self.profile = profile
+        self.device = device
+        self.cache = cache
+        self.qps = float(record["qps"])
+        self.sched = SchedConfig(
+            batch=int(record["d"]), m=int(record["m"]), o=int(record["o"]),
+            sd_sparse=int(record["sd_sparse"]),
+        )
+        self.plan = record["plan"]
+        placements = enumerate_placements(profile, device)
+        by_plan = [p for p in placements if p.plan == self.plan]
+        self.placement = by_plan[0] if by_plan else placements[0]
+        d = max(self.sched.batch, 1)
+        self.d = d
+        sp = cache.tables.split(d)
+        self.offsets = sp["offsets"]
+        self.inv = sp["inv"]
+        self.sub_s = sp["sub_s"]
+        t, pl, s = cache.tables, self.placement, self.sched
+        self.k = max(s.m, 1)
+        if self.plan == "cpu_model":
+            self.dur = t.cpu_durations(pl.host_ops, s.o, s.m, d, device)
+        elif self.plan == "cpu_sd":
+            self.k_sparse = max(s.sd_sparse, 1)
+            self.dur_sparse = t.cpu_durations(
+                pl.host_sparse, s.o, self.k_sparse, d, device)
+            self.dur_dense = t.cpu_durations(pl.host_dense, 1, s.m, d, device)
+        else:
+            self.host_threads = max(device.cpu.cores // max(s.o, 1), 1)
+
+    # -- internals -----------------------------------------------------------
+
+    def _sub_index(self, qidx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Sub-query indices (into the full CRN split) for queries ``qidx``."""
+        starts = self.offsets[qidx]
+        counts = (self.offsets[qidx + 1] - starts).astype(np.int64)
+        total = int(counts.sum())
+        if total == 0:
+            return np.zeros(0, np.int64), counts
+        cum0 = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        sub = np.repeat(starts - cum0, counts) + np.arange(total)
+        return sub, counts
+
+    def _scalar_table(self, key: tuple, fn, uniq: np.ndarray) -> np.ndarray:
+        return self.cache.tables.scalar_vec(key, fn, uniq)
+
+    def _accel(self, sub_ready: np.ndarray, sub_s: np.ndarray) -> np.ndarray:
+        """Fused launches through host pool -> admission -> link -> engine,
+        identical to the simulator's ``_fast_accel`` structure."""
+        pl, s, dev = self.placement, self.sched, self.device
+        starts, totals = _fusion_groups(sub_ready, sub_s.astype(np.int64),
+                                        self.d, s.fuse)
+        bounds = np.append(starts, len(sub_ready))
+        ready = sub_ready[bounds[1:] - 1]
+        uniq_t, inv_t = np.unique(totals, return_inverse=True)
+        o = max(s.o, 1)
+        if pl.host_ops:
+            th = self._scalar_table(
+                ("cpu_stage", pl.host_ops, o, self.host_threads, dev.name),
+                lambda b: cpu_stage_time(pl.host_ops, b, o, dev,
+                                         self.host_threads), uniq_t)[inv_t]
+            ready = fifo_finish(ready, th, self.host_threads)
+        te = self._scalar_table(
+            ("accel_engine", pl.accel_ops, dev.name),
+            lambda b: accel_engine_time(pl.accel_ops, b, dev), uniq_t)[inv_t]
+        tl = self._scalar_table(
+            ("accel_link", pl.link_bytes_per_item, dev.name),
+            lambda b: accel_link_time(pl.link_bytes_per_item, b, dev),
+            uniq_t)[inv_t]
+        e_end = _accel_pipeline(ready, tl, te, s.m)
+        return np.repeat(e_end, np.diff(bounds))
+
+    # -- public --------------------------------------------------------------
+
+    def finish(self, qidx: np.ndarray, ready: np.ndarray) -> np.ndarray:
+        """Per-query finish times for CRN-stream queries ``qidx`` entering
+        this server's (initially idle) pools at ``ready`` (sorted)."""
+        qidx = np.asarray(qidx, np.int64)
+        out = np.array(ready, dtype=np.float64, copy=True)
+        if len(qidx) == 0:
+            return out
+        sub, counts = self._sub_index(qidx)
+        nz = counts > 0
+        if not nz.any():
+            return out
+        sub_ready = np.repeat(out, counts)
+        inv = self.inv[sub]
+        if self.plan == "cpu_model":
+            ends = fifo_finish(sub_ready, self.dur[inv], self.k)
+        elif self.plan == "cpu_sd":
+            s_end = fifo_finish(sub_ready, self.dur_sparse[inv], self.k_sparse)
+            ends = fifo_finish(s_end, self.dur_dense[inv], self.k)
+        else:
+            ends = self._accel(sub_ready, self.sub_s[sub])
+        cum0 = np.concatenate([[0], np.cumsum(counts)])
+        out[nz] = np.maximum.reduceat(ends, cum0[:-1][nz])
+        return out
+
+    def solo_time(self, qidx: np.ndarray) -> np.ndarray:
+        """Unloaded per-query service time (the hedge-completion model):
+        list-scheduling wave bound ``max(longest sub-query, work / k)`` per
+        pool stage; serialized link+engine on accelerators."""
+        qidx = np.asarray(qidx, np.int64)
+        sub, counts = self._sub_index(qidx)
+        out = np.zeros(len(qidx))
+        nz = counts > 0
+        if not nz.any():
+            return out
+        cuts = np.concatenate([[0], np.cumsum(counts)])[:-1][nz]
+
+        def wave(dur: np.ndarray, k: int) -> np.ndarray:
+            longest = np.maximum.reduceat(dur, cuts)
+            work = np.add.reduceat(dur, cuts)
+            return np.maximum(longest, work / max(k, 1))
+
+        inv = self.inv[sub]
+        if self.plan == "cpu_model":
+            out[nz] = wave(self.dur[inv], self.k)
+        elif self.plan == "cpu_sd":
+            out[nz] = wave(self.dur_sparse[inv], self.k_sparse) + \
+                wave(self.dur_dense[inv], self.k)
+        else:
+            pl, dev = self.placement, self.device
+            uniq, inv_s = np.unique(self.sub_s[sub], return_inverse=True)
+            te = self._scalar_table(
+                ("accel_engine", pl.accel_ops, dev.name),
+                lambda b: accel_engine_time(pl.accel_ops, b, dev), uniq)
+            tl = self._scalar_table(
+                ("accel_link", pl.link_bytes_per_item, dev.name),
+                lambda b: accel_link_time(pl.link_bytes_per_item, b, dev),
+                uniq)
+            per_sub = (te + tl)[inv_s]
+            out[nz] = np.add.reduceat(per_sub, cuts)
+            if pl.host_ops:
+                th = self._scalar_table(
+                    ("cpu_stage", pl.host_ops, max(self.sched.o, 1),
+                     self.host_threads, dev.name),
+                    lambda b: cpu_stage_time(pl.host_ops, b,
+                                             max(self.sched.o, 1), dev,
+                                             self.host_threads), uniq)[inv_s]
+                out[nz] += wave(th, self.host_threads)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# failure schedules
+# ---------------------------------------------------------------------------
+
+
+def failure_schedule(n_steps: int, n_servers: int, fail_prob: float,
+                     seed: int = 0) -> list[tuple[int, int, float]]:
+    """``(interval, server_type, window_frac)`` events: each server type
+    loses one machine with probability ``fail_prob`` per interval, at
+    ``window_frac`` of the measured query window (so failover is observed
+    at query granularity).  Deterministic in ``seed`` — share one schedule
+    across policies for a fair (CRN) comparison."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for t in range(n_steps):
+        for h in range(n_servers):
+            if rng.random() < fail_prob:
+                out.append((t, h, float(rng.uniform(0.2, 0.8))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the day simulation
+# ---------------------------------------------------------------------------
+
+
+def _percentiles(lat_ms: np.ndarray) -> tuple[float, float, float]:
+    p50, p95, p99 = np.percentile(lat_ms, (50, 95, 99))
+    return float(p50), float(p95), float(p99)
+
+
+def simulate_cluster_day(
+    table: EfficiencyTable,
+    records: dict[str, dict],
+    profiles: dict[str, ModelProfile],
+    traces: np.ndarray,                 # [M, T] per-workload diurnal loads
+    policy: str = "hercules",
+    servers: dict[str, DeviceProfile] | None = None,
+    overprovision: float = 0.05,
+    transitions: TransitionConfig | None = None,
+    config: RuntimeConfig | None = None,
+    failures: list[tuple[int, int, float]] | None = None,
+    query_sizes: np.ndarray | None = None,
+    seed: int = 0,
+) -> dict:
+    """Serve a full diurnal day at query granularity.
+
+    ``table``/``records`` come from ``efficiency.build_table``; ``profiles``
+    maps workload name -> :class:`ModelProfile`.  Returns the provisioning
+    series (power incl. transition drain, capacity, resolves/holds/churn)
+    plus *achieved* per-workload latency percentiles and SLA attainment —
+    the numbers ``provision_day`` only asserts via the QPS column.
+    """
+    servers = servers or SERVER_TYPES
+    cfg = config or RuntimeConfig()
+    transitions = transitions or TransitionConfig()
+    if query_sizes is None:
+        from repro.core.efficiency import default_query_sizes
+        query_sizes = default_query_sizes()
+    M, T = traces.shape
+    H = len(table.servers)
+    cache = SimCache(query_sizes, seed)
+    services: dict[tuple[int, int], PairService] = {}
+
+    def service(h: int, m: int) -> PairService:
+        key = (h, m)
+        if key not in services:
+            rec = records[f"{table.workloads[m]}|{table.servers[h]}"]
+            services[key] = PairService(
+                profiles[table.workloads[m]], servers[table.servers[h]],
+                rec, cache)
+        return services[key]
+
+    prov = StatefulProvisioner(table, policy, overprovision, transitions,
+                               seed=seed)
+    routers = [QueryRouter([], hedge_quantile=cfg.hedge_quantile,
+                           hedge_factor=cfg.hedge_factor, seed=seed + m)
+               for m in range(M)]
+    fail_by_t: dict[int, list[tuple[int, float]]] = {}
+    for (ft, fh, frac) in failures or []:
+        fail_by_t.setdefault(ft, []).append((fh, frac))
+
+    power = np.zeros(T)
+    capacity = np.zeros(T, np.int64)
+    churn = np.zeros(T, np.int64)
+    events: list[str] = []
+    feasible = True
+    lat_by_m: list[list[np.ndarray]] = [[] for _ in range(M)]
+    n_hedged = np.zeros(M, np.int64)
+    n_retried = np.zeros(M, np.int64)
+    cap_q = min(cfg.queries_per_interval, _PROBE_CAP)
+
+    for t in range(T):
+        step = prov.step(traces[:, t])
+        power[t] = step.power_w
+        capacity[t] = step.capacity
+        churn[t] = step.churn
+        if not step.feasible:
+            feasible = False
+            events.append(f"t={t}: {policy} infeasible on surviving pool")
+        t0 = t * transitions.interval_s
+        # map this interval's failures onto serving (h, m) victims
+        victims_by_m: dict[int, list[tuple[int, float]]] = {}
+        for (fh, frac) in fail_by_t.get(t, []):
+            before = int(prov.avail[fh])
+            cells = prov.fail(fh)
+            if not cells:
+                if int(prov.avail[fh]) < before:
+                    events.append(
+                        f"t={t}: spare {table.servers[fh]} failed")
+                continue
+            for (h, m) in cells:
+                victims_by_m.setdefault(m, []).append((h, frac))
+                events.append(
+                    f"t={t}: serving {table.servers[h]} failed "
+                    f"({table.workloads[m]}) -> re-route + re-provision")
+
+        for m in range(M):
+            rate = float(traces[m, t])
+            if rate <= 0.0:
+                continue
+            if step.alloc[:, m].sum() == 0:
+                feasible = False
+                events.append(f"t={t}: {table.workloads[m]} unallocated")
+                continue
+            n = int(np.clip(rate * transitions.interval_s, 64, cap_q))
+            arrivals = t0 + np.cumsum(cache.unit_gaps[:n] * (1.0 / rate))
+            span = float(arrivals[-1] - arrivals[0])
+
+            slots: list[ServerSlot] = []
+            pair_of: list[PairService] = []
+            for h in range(H):
+                cnt = int(step.alloc[h, m])
+                add = int(step.added[h, m])
+                rem = int(step.removed[h, m])
+                if cnt + rem == 0:
+                    continue
+                svc = service(h, m)
+                for i in range(cnt):
+                    ready = t0 + transitions.model_load_s \
+                        if i >= cnt - add else t0
+                    slots.append(ServerSlot(table.servers[h], svc.qps,
+                                            ready_at=ready))
+                    pair_of.append(svc)
+                for _ in range(rem):  # draining: serves until the deadline
+                    slots.append(ServerSlot(
+                        table.servers[h], svc.qps, ready_at=t0,
+                        retire_at=t0 + transitions.drain_s))
+                    pair_of.append(svc)
+            router = routers[m]
+            router.refresh(slots)
+
+            # mid-window failures: victim stops taking queries at t_f
+            fail_times: list[tuple[int, float]] = []
+            for (h, frac) in victims_by_m.get(m, []):
+                t_f = float(arrivals[0] + frac * span)
+                vi = next((i for i, s in enumerate(slots)
+                           if s.server_type == table.servers[h]
+                           and s.accepts(t_f)), None)
+                if vi is None:
+                    continue
+                slots[vi].retire_at = t_f
+                fail_times.append((vi, t_f))
+
+            try:
+                assigned = router.assign_stream(arrivals)
+            except RuntimeError:
+                feasible = False
+                events.append(f"t={t}: {table.workloads[m]} had no ready "
+                              "servers in the window")
+                continue
+            ready = arrivals.copy()
+            latency = np.zeros(n)
+            done = np.zeros(n, bool)
+
+            # failed slots first: finished-before-failure queries complete,
+            # the rest re-dispatch to healthy slots at the detection time
+            for (vi, t_f) in fail_times:
+                qv = np.flatnonzero(assigned == vi)
+                if len(qv) == 0:
+                    router.mark_failed(slots[vi])
+                    continue
+                # an earlier victim's retries may have landed here: FIFO
+                # order is by ready time, not stream index
+                qv = qv[np.argsort(ready[qv], kind="stable")]
+                f = pair_of[vi].finish(qv, ready[qv])
+                ok = f <= t_f
+                latency[qv[ok]] = f[ok] - arrivals[qv[ok]]
+                done[qv[ok]] = True
+                router.mark_failed(slots[vi])
+                lost = qv[~ok]
+                if len(lost):
+                    ready[lost] = t_f
+                    try:
+                        assigned[lost] = router.assign_stream(ready[lost])
+                        n_retried[m] += len(lost)
+                    except RuntimeError:
+                        feasible = False
+                        latency[lost] = np.inf
+                        done[lost] = True
+                        events.append(
+                            f"t={t}: {table.workloads[m]} lost queries — "
+                            "no healthy servers left to retry on")
+
+            for si, svc in enumerate(pair_of):
+                qs = np.flatnonzero((assigned == si) & ~done)
+                if len(qs) == 0:
+                    continue
+                order = np.argsort(ready[qs], kind="stable")
+                qs = qs[order]
+                f = svc.finish(qs, ready[qs])
+                latency[qs] = f - arrivals[qs]
+                done[qs] = True
+
+            # straggler hedging: duplicate at arrival + threshold, winner =
+            # min(original, threshold + unloaded service on the best
+            # alternative slot type) — optimistic about the alternate's queue
+            thr = router.hedge_threshold()
+            if np.isfinite(thr) and len(slots) > 1:
+                straggler = np.flatnonzero(np.isfinite(latency)
+                                           & (latency > thr))
+                # hedge targets must actually be serving during the window
+                # (loading/draining/failed slots can't take a duplicate)
+                w_end = float(arrivals[-1])
+                cands = sorted(
+                    (i for i, s in enumerate(slots) if s.accepts(w_end)),
+                    key=lambda i: slots[i].qps, reverse=True)
+                if len(straggler) and cands:
+                    alt = np.where(assigned[straggler] != cands[0],
+                                   cands[0],
+                                   cands[1] if len(cands) > 1 else -1)
+                    ok = alt >= 0  # never hedge onto the straggler's own box
+                    for a in np.unique(alt[ok]):
+                        sub = straggler[ok & (alt == a)]
+                        hedged = thr + pair_of[a].solo_time(sub)
+                        better = hedged < latency[sub]
+                        latency[sub[better]] = hedged[better]
+                        n_hedged[m] += int(better.sum())
+            router.observe_many(latency[np.isfinite(latency)])
+            lat_by_m[m].append(latency)
+
+    workloads = {}
+    all_meet = True
+    for m, name in enumerate(table.workloads):
+        lat_ms = np.concatenate(lat_by_m[m]) * 1e3 if lat_by_m[m] else \
+            np.array([np.inf])
+        p50, p95, p99 = _percentiles(lat_ms)
+        sla = profiles[name].sla_ms
+        q = float(np.quantile(lat_ms, cfg.sla_quantile))
+        attainment = float(np.mean(lat_ms <= sla))
+        meets = q <= sla
+        all_meet &= meets
+        workloads[name] = {
+            "sla_ms": sla, "p50_ms": p50, "p95_ms": p95, "p99_ms": p99,
+            "sla_attainment": attainment, "meets_sla": bool(meets),
+            "n_queries": int(len(lat_ms)), "n_hedged": int(n_hedged[m]),
+            "n_retried": int(n_retried[m]),
+        }
+    return {
+        "policy": policy,
+        "power_w": power,
+        "capacity": capacity,
+        "churn": churn,
+        "feasible": feasible,
+        "peak_power_w": float(power.max()),
+        "avg_power_w": float(power.mean()),
+        "peak_capacity": int(capacity.max()),
+        "avg_capacity": float(capacity.mean()),
+        "resolves": prov.n_resolves,
+        "holds": prov.n_holds,
+        "total_churn": int(churn.sum()),
+        "workloads": workloads,
+        "all_meet_sla": bool(all_meet),
+        "events": events,
+    }

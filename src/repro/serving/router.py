@@ -4,10 +4,16 @@ Completes the online-serving half of the paper with the mechanisms a real
 fleet needs (DESIGN.md §5 fault tolerance):
 
 - weighted routing across the servers a workload is allocated to (weights =
-  each server's profiled QPS), via deterministic low-discrepancy assignment;
+  each server's profiled QPS), via deterministic low-discrepancy assignment
+  (:meth:`QueryRouter.assign_stream` — the golden-ratio sequence over the
+  cumulative weight profile, segment-vectorized between pool changes);
 - health tracking: a failed server's queries re-route and the cluster
-  manager is told to re-provision (elastic N_h) — the cluster sim calls
-  ``provision`` again with the reduced availability;
+  manager is told to re-provision (elastic N_h) — the cluster runtime calls
+  the provisioner again with the reduced availability;
+- transition awareness: a slot only takes new queries inside its
+  ``[ready_at, retire_at)`` window — newly provisioned servers join the
+  pool once their model load completes, drained servers leave it while
+  still finishing in-flight work (`repro.serving.cluster_runtime`);
 - straggler mitigation: hedged re-dispatch — if a sub-query's latency
   exceeds the p99-based hedge threshold, a duplicate fires to the
   next-fastest server and the first completion wins (classic tail-at-scale
@@ -19,6 +25,8 @@ import dataclasses
 
 import numpy as np
 
+_GOLDEN = 0.6180339887498949  # frac(phi): lowest-discrepancy 1-D sequence
+
 
 @dataclasses.dataclass
 class ServerSlot:
@@ -26,6 +34,11 @@ class ServerSlot:
     qps: float
     healthy: bool = True
     inflight: int = 0
+    ready_at: float = 0.0          # model load completes (serving starts)
+    retire_at: float = float("inf")  # drain deadline (stops taking queries)
+
+    def accepts(self, t: float) -> bool:
+        return self.healthy and self.ready_at <= t < self.retire_at
 
 
 class QueryRouter:
@@ -36,8 +49,16 @@ class QueryRouter:
         self.hedge_factor = hedge_factor
         self.rng = np.random.default_rng(seed)
         self._lat_samples: list[float] = []
+        # low-discrepancy phase: seed-derived without consuming self.rng
+        # (dispatch()'s failure draws stay bit-stable across this addition)
+        self._seq = (int(seed) * 2654435761) % (1 << 16)
 
     # -- routing -------------------------------------------------------------
+
+    def refresh(self, slots: list[ServerSlot]):
+        """Swap in a new interval's slot pool, keeping latency history (the
+        hedge threshold carries over) and the assignment sequence."""
+        self.slots = slots
 
     def healthy_slots(self) -> list[ServerSlot]:
         return [s for s in self.slots if s.healthy]
@@ -53,6 +74,44 @@ class QueryRouter:
     def mark_failed(self, slot: ServerSlot):
         slot.healthy = False
 
+    def assign_stream(self, arrivals: np.ndarray) -> np.ndarray:
+        """Assign each arrival to a slot; returns slot indices.
+
+        Deterministic low-discrepancy weighted assignment: query ``i`` maps
+        to the slot whose cumulative-weight bin contains ``frac(i * phi)``
+        (weights = profiled QPS), so every weight-``w`` slot receives a
+        ``w``-proportional, evenly interleaved share of the stream without
+        per-query randomness — reproducible across policies (CRN) and free
+        of the clumping a multinomial draw would add.  The pool is
+        re-evaluated at slot readiness/retirement boundaries inside the
+        stream (segment-vectorized); raises ``RuntimeError`` when no slot
+        accepts queries at some point of the stream.
+        """
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        n = len(arrivals)
+        out = np.empty(n, np.int64)
+        if n == 0:
+            return out
+        # pool-change boundaries that fall inside this stream
+        edges = {s.ready_at for s in self.slots} | {s.retire_at for s in self.slots}
+        cuts = sorted(e for e in edges if arrivals[0] < e <= arrivals[-1])
+        bounds = [0] + [int(np.searchsorted(arrivals, c, side="left"))
+                        for c in cuts] + [n]
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            if lo >= hi:
+                continue
+            t = float(arrivals[lo])
+            w = np.array([s.qps if s.accepts(t) else 0.0 for s in self.slots])
+            total = w.sum()
+            if total <= 0.0:
+                raise RuntimeError("no healthy servers for workload")
+            cum = np.cumsum(w) / total
+            u = ((self._seq + np.arange(lo, hi)) * _GOLDEN) % 1.0
+            out[lo:hi] = np.minimum(np.searchsorted(cum, u, side="right"),
+                                    len(self.slots) - 1)
+        self._seq += n
+        return out
+
     # -- hedging -------------------------------------------------------------
 
     def hedge_threshold(self) -> float:
@@ -64,6 +123,11 @@ class QueryRouter:
 
     def observe_latency(self, seconds: float):
         self._lat_samples.append(seconds)
+        if len(self._lat_samples) > 4096:
+            self._lat_samples = self._lat_samples[-2048:]
+
+    def observe_many(self, seconds: np.ndarray):
+        self._lat_samples.extend(np.asarray(seconds, dtype=float).tolist())
         if len(self._lat_samples) > 4096:
             self._lat_samples = self._lat_samples[-2048:]
 

@@ -199,6 +199,16 @@ class _SizeTables:
             tab = self._scalar[key] = {}
         return tab
 
+    def scalar_vec(self, key: tuple, fn, uniq: np.ndarray) -> np.ndarray:
+        """Vector of ``fn(b)`` over the distinct batch sizes ``uniq``,
+        memoized under ``key`` (shared by the accel fast path and the
+        cluster runtime's per-slot service model)."""
+        tab = self.scalar(key)
+        return np.array([
+            tab.get(b) if b in tab else tab.setdefault(b, fn(b))
+            for b in uniq.tolist()
+        ])
+
 
 class SimCache:
     """Common-random-number probe cache for one (query-size distribution,
@@ -472,11 +482,7 @@ def _fast_accel(placement, device, sched, arrivals, busy, tables, n):
     uniq_t, inv_t = np.unique(totals, return_inverse=True)
 
     def table(key, fn):
-        tab = tables.scalar(key)
-        return np.array([
-            tab.get(b) if b in tab else tab.setdefault(b, fn(b))
-            for b in uniq_t.tolist()
-        ])
+        return tables.scalar_vec(key, fn, uniq_t)
 
     if host_ops:
         th_u = table(("cpu_stage", host_ops, o, host_threads, device.name),

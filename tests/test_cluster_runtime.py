@@ -1,0 +1,255 @@
+"""Stateful provisioning + the query-granular cluster serving runtime:
+transition-delay accounting, hysteresis, elastic re-provisioning after
+failures, router stream assignment, and PairService <-> fast-engine
+equivalence."""
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import paper_profile
+from repro.core import profile_cache
+from repro.core.cluster import (
+    EfficiencyTable,
+    StatefulProvisioner,
+    TransitionConfig,
+)
+from repro.core.devices import SERVER_TYPES
+from repro.core.efficiency import build_table, default_query_sizes
+from repro.core.partition import enumerate_placements
+from repro.serving.cluster_runtime import (
+    PairService,
+    RuntimeConfig,
+    simulate_cluster_day,
+)
+from repro.serving.diurnal import diurnal_trace, load_increment_rate
+from repro.serving.router import QueryRouter, ServerSlot
+from repro.serving.simulator import SchedConfig, SimCache, _run_plan
+
+
+def _table1(qps=100.0, avail=20):
+    return EfficiencyTable(("s0",), ("w0",), np.array([[qps]]),
+                           np.array([[200.0]]), np.array([avail]))
+
+
+class TestStatefulProvisioner:
+    def test_hysteresis_suppresses_flapping(self):
+        prov = StatefulProvisioner(_table1(), overprovision=0.05,
+                                   transitions=TransitionConfig(hysteresis=0.10))
+        s0 = prov.step(np.array([1000.0]))
+        assert s0.resolved and s0.feasible and s0.capacity == 11
+        # single-interval wiggles inside the band: held, zero churn
+        for load in (1020.0, 980.0, 1005.0):
+            s = prov.step(np.array([load]))
+            assert not s.resolved and s.churn == 0
+            assert (s.alloc == s0.alloc).all()
+        # out-of-band growth: re-solve, servers added
+        s = prov.step(np.array([1500.0]))
+        assert s.resolved and s.added.sum() > 0 and s.removed.sum() == 0
+        assert prov.n_holds == 3 and prov.n_resolves == 2
+
+    def test_band_hold_requires_coverage(self):
+        # inside the band but no longer covered (capacity lost) -> re-solve
+        prov = StatefulProvisioner(_table1(avail=20), overprovision=0.05)
+        prov.step(np.array([1000.0]))
+        prov.alloc[0, 0] -= 2  # exogenous capacity loss
+        s = prov.step(np.array([1000.0]))
+        assert s.resolved and s.capacity == 11
+
+    def test_transition_power_accounting(self):
+        cfg = TransitionConfig(interval_s=900.0, model_load_s=120.0,
+                               drain_s=150.0, hysteresis=0.0)
+        t = _table1()
+        prov = StatefulProvisioner(t, overprovision=0.0, transitions=cfg)
+        s1 = prov.step(np.array([1000.0]))          # warm start: no transient
+        assert s1.added.sum() == 0 and s1.power_w == 10 * 200.0
+        s2 = prov.step(np.array([1500.0]))          # growth: adds, no drain
+        assert s2.added.sum() == 5 and s2.removed.sum() == 0
+        assert s2.power_w == 15 * 200.0
+        s3 = prov.step(np.array([500.0]))           # shrink: drain power tail
+        assert s3.added.sum() == 0 and s3.removed.sum() == 10
+        assert s3.power_w == pytest.approx(
+            5 * 200.0 + 10 * 200.0 * cfg.drain_s / cfg.interval_s)
+
+    def test_fail_all_serving_takes_victim_and_forces_resolve(self):
+        prov = StatefulProvisioner(_table1(avail=3), overprovision=0.0)
+        s = prov.step(np.array([280.0]))
+        assert s.capacity == 3  # the whole pool serves
+        victims = prov.fail(0)
+        assert victims == [(0, 0)]
+        assert prov.avail[0] == 2 and prov.alloc[0, 0] == 2
+        s2 = prov.step(np.array([280.0]))           # needs 3, only 2 left
+        assert s2.resolved and not s2.feasible
+        s3 = prov.step(np.array([150.0]))           # shrunken pool suffices
+        assert s3.feasible
+
+    def test_fail_spare_leaves_alloc_alone(self):
+        prov = StatefulProvisioner(_table1(avail=20), overprovision=0.0,
+                                   seed=0)
+        prov.step(np.array([100.0]))  # 1 of 20 serving
+        # 19 spares: overwhelmingly likely the victim is idle
+        hits = sum(bool(prov.fail(0)) for _ in range(3))
+        assert prov.avail[0] == 17
+        assert prov.alloc[0, 0] + hits == 1
+
+
+class TestRouterStream:
+    def test_weight_proportional_and_deterministic(self):
+        slots = [ServerSlot("a", 300.0), ServerSlot("b", 100.0)]
+        r1 = QueryRouter(list(slots), seed=3)
+        r2 = QueryRouter(list(slots), seed=3)
+        arr = np.linspace(0.0, 1.0, 10_000)
+        a1, a2 = r1.assign_stream(arr), r2.assign_stream(arr)
+        assert (a1 == a2).all()
+        frac = (a1 == 0).mean()
+        assert abs(frac - 0.75) < 0.01
+
+    def test_ready_and_retire_windows(self):
+        slots = [ServerSlot("old", 100.0, retire_at=0.5),
+                 ServerSlot("new", 100.0, ready_at=0.5)]
+        router = QueryRouter(slots, seed=0)
+        arr = np.linspace(0.0, 1.0, 1000, endpoint=False)
+        a = router.assign_stream(arr)
+        assert (a[arr < 0.5] == 0).all()
+        assert (a[arr >= 0.5] == 1).all()
+
+    def test_no_acceptor_raises(self):
+        router = QueryRouter([ServerSlot("a", 100.0, ready_at=5.0)], seed=0)
+        with pytest.raises(RuntimeError):
+            router.assign_stream(np.array([0.0, 1.0]))
+
+
+SIZES = default_query_sizes(300, seed=0)
+
+
+class TestPairServiceMatchesEngine:
+    """A slot receiving the whole CRN stream must reproduce the PR-2 fast
+    engine bit-for-bit — the runtime's service model *is* the simulator."""
+
+    def _check(self, workload, server, plan, sched):
+        prof = paper_profile(workload)
+        dev = SERVER_TYPES[server]
+        cache = SimCache(SIZES, seed=0)
+        rec = {"qps": 1000.0, "plan": plan, "m": sched.m, "d": sched.batch,
+               "o": sched.o, "sd_sparse": sched.sd_sparse}
+        svc = PairService(prof, dev, rec, cache)
+        n = 400
+        arrivals = np.cumsum(cache.unit_gaps[:n] * (1.0 / 900.0))
+        got = svc.finish(np.arange(n), arrivals)
+        pl = next(p for p in enumerate_placements(prof, dev) if p.plan == plan)
+        want, _ = _run_plan(pl, dev, sched, arrivals, cache.sized[:n],
+                            "fast", cache.tables, n)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_cpu_model(self):
+        self._check("dlrm-rmc1", "T2", "cpu_model",
+                    SchedConfig(batch=64, m=4, o=2))
+
+    def test_cpu_sd(self):
+        self._check("dlrm-rmc1", "T2", "cpu_sd",
+                    SchedConfig(batch=64, m=8, o=2, sd_sparse=6))
+
+    def test_accel_hot(self):
+        self._check("dlrm-rmc3", "T7", "accel_hot",
+                    SchedConfig(batch=256, m=2, o=2))
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    """Profiled 2-workload x 3-server setup (hermetic profile cache)."""
+    mp = pytest.MonkeyPatch()
+    tmp = pathlib.Path(tempfile.mkdtemp())
+    mp.setattr(profile_cache, "PROFILE_DIR", tmp)
+    profiles = {n: paper_profile(n) for n in ("dlrm-rmc1", "dlrm-rmc3")}
+    servers = {s: SERVER_TYPES[s] for s in ("T2", "T3", "T7")}
+    table, records = build_table(profiles, servers,
+                                 {"T2": 70, "T3": 15, "T7": 5})
+    yield table, records, profiles, servers
+    mp.undo()
+
+
+def _traces(table, frac, n_steps):
+    cap = (table.avail[:, None] * table.qps).sum(axis=0)
+    return np.stack([diurnal_trace(frac * cap[m], seed=m, n_steps=n_steps)
+                     for m in range(len(table.workloads))])
+
+
+class TestClusterRuntime:
+    def test_sla_attained_at_benchmark_fraction(self, small_cluster):
+        """At the benchmark's comparison load fraction, the runtime's
+        achieved latency meets every workload's SLA for both hercules and
+        greedy, and hercules provisions no more peak power."""
+        table, records, profiles, servers = small_cluster
+        traces = _traces(table, 0.09, 24)
+        R = max(load_increment_rate(t) for t in traces)
+        out = {}
+        for pol in ("greedy", "hercules"):
+            out[pol] = simulate_cluster_day(
+                table, records, profiles, traces, policy=pol,
+                servers=servers, overprovision=R)
+            assert out[pol]["feasible"], pol
+            assert out[pol]["all_meet_sla"], (pol, out[pol]["workloads"])
+            for w in out[pol]["workloads"].values():
+                assert w["sla_attainment"] >= 0.95
+        assert out["hercules"]["peak_power_w"] <= \
+            out["greedy"]["peak_power_w"] + 1e-6
+
+    def test_flat_load_holds_allocation(self, small_cluster):
+        """Hysteresis: jitter inside the band never re-provisions."""
+        table, records, profiles, servers = small_cluster
+        M = len(table.workloads)
+        cap = (table.avail[:, None] * table.qps).sum(axis=0)
+        rng = np.random.default_rng(0)
+        flat = np.stack([
+            0.08 * cap[m] * (1.0 + 0.02 * rng.standard_normal(12))
+            for m in range(M)
+        ])
+        out = simulate_cluster_day(table, records, profiles, flat,
+                                   policy="hercules", servers=servers,
+                                   overprovision=0.10)
+        assert out["resolves"] == 1 and out["holds"] == 11
+        assert out["total_churn"] == 0 and out["all_meet_sla"]
+
+    def test_failure_reroutes_and_reprovisions(self, small_cluster):
+        """A serving machine dies mid-window: its unfinished queries retry
+        on healthy slots, the provisioner re-solves on the shrunken pool,
+        and the day stays feasible with SLAs met."""
+        table, records, profiles, servers = small_cluster
+        # single-type fleet sized so nearly every machine serves: the
+        # victim of a type-wide failure is a serving box
+        t1 = EfficiencyTable(("T2",), ("dlrm-rmc1",),
+                             table.qps[:1, :1], table.power[:1, :1],
+                             np.array([6]))
+        cap = 6 * float(t1.qps[0, 0])
+        # flat load needing 5 of the 6 machines: the failure victim is a
+        # serving box (deterministic for this seed), and the surviving
+        # spare lets the re-solve keep the day feasible
+        traces = np.full((1, 8), 0.78 * cap)
+        out = simulate_cluster_day(
+            t1, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=0.05,
+            failures=[(2, 0, 0.5)], seed=1)
+        assert out["feasible"]
+        assert any("serving T2 failed" in e for e in out["events"])
+        w = out["workloads"]["dlrm-rmc1"]
+        assert w["n_retried"] > 0         # in-flight queries re-dispatched
+        assert out["resolves"] >= 2       # elastic re-provision after loss
+        # the spare absorbs the loss: steady capacity is restored
+        assert out["capacity"][-1] == out["capacity"][0]
+        # a day pinned at ~94% per-slot utilization plus a machine loss
+        # dents the tail but the fleet keeps serving
+        assert w["sla_attainment"] > 0.85
+
+    def test_transition_delay_gates_new_slots(self, small_cluster):
+        """A growth step's added servers only serve after model_load_s: with
+        an absurd load delay the measured window never sees them, yet
+        make-before-break draining keeps the day feasible and in-SLA."""
+        table, records, profiles, servers = small_cluster
+        traces = _traces(table, 0.09, 12)
+        R = max(load_increment_rate(t) for t in traces)
+        out = simulate_cluster_day(
+            table, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=R,
+            transitions=TransitionConfig(model_load_s=600.0, drain_s=700.0))
+        assert out["feasible"] and out["all_meet_sla"]

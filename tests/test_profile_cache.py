@@ -38,6 +38,10 @@ class TestKeying:
                                       SERVER_TYPES["T3"], qsizes(), seed=0) != base
         assert profile_cache.pair_key("hercules", prof, dev, qsizes(),
                                       o_grid=(1, 2), seed=0) != base
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(),
+                                      seed=0, qps_tol=0.01) != base
+        assert profile_cache.pair_key("hercules", prof, dev, qsizes(),
+                                      seed=0, engine="reference") != base
 
     def test_load_rejects_stale_and_corrupt(self, cache_dir):
         p = profile_cache.store("hercules", "w", "s", "k" * 40, {"qps": 1.0})

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Relative-link checker for the docs tree (CI gate).
+
+Usage: python tools/check_links.py README.md docs [more files/dirs...]
+
+Scans markdown files for inline links/images ``[text](target)`` and fails
+if a relative target does not resolve on disk (anchors are stripped;
+absolute URLs and mailto/anchor-only links are skipped).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            out.append(p)
+        else:
+            print(f"check_links: no such file or directory: {a}")
+            sys.exit(2)
+    return out
+
+
+def main(args: list[str]) -> int:
+    bad: list[str] = []
+    n_links = 0
+    for f in md_files(args or ["README.md", "docs"]):
+        for m in LINK.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (f.parent / rel).exists():
+                bad.append(f"{f}: broken link -> {target}")
+    for b in bad:
+        print(b)
+    print(f"check_links: {n_links} relative links, {len(bad)} broken")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
