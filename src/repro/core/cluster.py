@@ -160,13 +160,20 @@ class TransitionConfig:
     outgoing servers cover the load until the incoming ones are warm.
     ``hysteresis`` is the relative load band around the last provisioned
     point inside which the previous allocation is held (no re-solve, no
-    churn) as long as it still covers the target.
+    churn) as long as it still covers the target.  ``feedback_boost`` is
+    the extra relative headroom a re-solve provisions when the *achieved*
+    tail violated the SLA in the previous interval (``tail_ok=False`` fed
+    to :meth:`StatefulProvisioner.step`): offered load alone cannot see a
+    backlog that queueing has already built, so the feedback both vetoes
+    the hysteresis hold and sizes the fleet above the offered load to
+    drain it.
     """
 
     interval_s: float = 900.0      # provisioning interval (24h / 96)
     model_load_s: float = 120.0    # weight/table load before serving starts
     drain_s: float = 150.0         # post-deactivation drain (power still drawn)
     hysteresis: float = 0.10       # relative load band that holds the alloc
+    feedback_boost: float = 0.10   # extra headroom on a tail-violation resolve
 
 
 @dataclasses.dataclass
@@ -200,7 +207,12 @@ class StatefulProvisioner:
       power immediately but only start serving after ``model_load_s``;
       removed servers keep drawing power for ``drain_s`` while they drain;
     - ``fail()`` removes servers from the live pool *and* from the current
-      allocation (elastic N_h), forcing a re-solve at the next step.
+      allocation (elastic N_h), forcing a re-solve at the next step;
+    - ``step(load, tail_ok=False)`` is the achieved-tail feedback path
+      (the cluster runtime reports whether the previous interval met its
+      SLAs): a violation vetoes the hysteresis hold — offered load looks
+      fine while carried backlog is eating the tail — and the re-solve
+      provisions ``feedback_boost`` extra headroom to drain the backlog.
     """
 
     def __init__(self, table: EfficiencyTable, policy: str = "hercules",
@@ -221,6 +233,7 @@ class StatefulProvisioner:
         self.t = 0
         self.n_resolves = 0
         self.n_holds = 0
+        self.n_tail_resolves = 0    # re-solves forced by tail feedback
 
     # -- failures ------------------------------------------------------------
 
@@ -271,25 +284,37 @@ class StatefulProvisioner:
             kwargs["seed"] = self.seed + self.t
         return fn(table, load, **kwargs)
 
-    def step(self, load: np.ndarray) -> StatefulStep:
+    def step(self, load: np.ndarray, tail_ok: bool = True) -> StatefulStep:
         load = np.asarray(load, dtype=np.float64)
         target = load * (1.0 + self.overprovision)
         cfg = self.transitions
-        hold = (not self._force) and self._within_band(load) and \
+        hold = (not self._force) and tail_ok and self._within_band(load) and \
             self._covers(target)
         if hold:
             self.n_holds += 1
             alloc_new, feasible = self.alloc, True
         else:
-            r = self._solve(load)
+            boost = 1.0 if tail_ok else 1.0 + cfg.feedback_boost
+            r = self._solve(load * boost)
             self.n_resolves += 1
+            if not tail_ok:
+                self.n_tail_resolves += 1
+                if not r.feasible and boost > 1.0:
+                    # the extra headroom is not available on this pool, but
+                    # the offered load itself may still be provisionable —
+                    # serve that rather than freezing on a stale allocation
+                    r = self._solve(load)
+            feasible = r.feasible
             if r.feasible:
                 alloc_new = r.alloc
                 self._provisioned_load = load.copy()
             else:
                 # best effort: keep serving on whatever survives
                 alloc_new = self.alloc
-            feasible = r.feasible
+                if not tail_ok and self._covers(target):
+                    # only the boosted target overshot the pool; the real
+                    # one is still covered, so the day itself is not lost
+                    feasible = True
             self._force = False
         added = np.maximum(alloc_new - self.alloc, 0)
         removed = np.maximum(self.alloc - alloc_new, 0)

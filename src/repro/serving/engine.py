@@ -14,7 +14,10 @@ exact vectorization exists:
 
 - ``k == 1``: the Lindley recurrence ``e_j = max(ready_j, e_{j-1}) + dur_j``
   unrolls to ``e_j = T_j + max_{l<=j}(ready_l - T_{l-1})`` with
-  ``T = cumsum(dur)`` — one ``cumsum`` plus one ``maximum.accumulate``.
+  ``T = cumsum(dur)`` — one ``cumsum`` plus one ``maximum.accumulate``.  A
+  carried prefix (the server still busy from an earlier window) enters the
+  closed form as ``e_{-1} = f0``, i.e. the first accumulate term becomes
+  ``max(ready_0, f0)`` — continuous-time windows cost one extra ``max``.
 - ``k >= n``: every job finds an idle server — ``max(ready, 0) + dur``.
 - otherwise: a minimal-overhead scalar sweep over pre-extracted float lists
   (``heapreplace`` on a k-element heap).  The general earliest-free
@@ -43,7 +46,8 @@ stats = {"lindley": 0, "idle": 0, "sweep": 0, "reference": 0}
 
 
 def fifo_finish(
-    ready: np.ndarray, dur: np.ndarray, k: int, slow: bool = False
+    ready: np.ndarray, dur: np.ndarray, k: int, slow: bool = False,
+    free0: np.ndarray | None = None,
 ) -> np.ndarray:
     """Finish times of jobs processed FIFO (in array order) by ``k``
     identical servers, each job taken by the earliest-free server.
@@ -51,6 +55,10 @@ def fifo_finish(
     ``ready`` need not be sorted: the j-th job enters service at
     ``max(ready_j, pop_j)`` where pops are handed out in array order —
     exactly the semantics of the reference ``heapq`` loop.
+
+    ``free0`` (length ``k``) seeds the servers' initial free times — the
+    carried backlog of an earlier window.  ``None`` keeps the historical
+    idle-pool start (all zeros) and its fast paths bit-for-bit.
     """
     ready = np.asarray(ready, dtype=np.float64)
     dur = np.asarray(dur, dtype=np.float64)
@@ -60,20 +68,64 @@ def fifo_finish(
     k = max(int(k), 1)
     if slow:
         stats["reference"] += 1
-        return _sweep(ready, dur, k)
+        return _sweep(ready, dur, k, free0)
     if k == 1:
         stats["lindley"] += 1
-        return _lindley(ready, dur)
-    if k >= n:  # every job gets an idle server
+        f0 = 0.0 if free0 is None else float(np.max(free0, initial=0.0))
+        return _lindley(ready, dur, f0)
+    if k >= n and (free0 is None or
+                   float(free0.max()) <= float(ready.min())):
+        # every job gets a server that is free by its arrival
         stats["idle"] += 1
-        return np.maximum(ready, 0.0) + dur
+        if free0 is None:
+            return np.maximum(ready, 0.0) + dur
+        return ready + dur
     stats["sweep"] += 1
-    return _sweep(ready, dur, k)
+    return _sweep(ready, dur, k, free0)
 
 
-def _sweep(ready: np.ndarray, dur: np.ndarray, k: int) -> np.ndarray:
+def fifo_finish_state(
+    ready: np.ndarray, dur: np.ndarray, k: int,
+    free0: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """:func:`fifo_finish` plus the pool's end state — the ``k`` server
+    free times after the last job, sorted ascending.  This is what a
+    continuous-time caller carries into the next window as ``free0``.
+
+    Finish times are identical to ``fifo_finish``: the ``k == 1`` closed
+    form is shared, and the ``k >= n`` shortcut applies whenever every
+    server is free by the first arrival — pops then consume the ``n``
+    smallest initial free times and every job starts at its arrival, so
+    both the ends and the end state are exact array expressions.
+    """
+    ready = np.asarray(ready, dtype=np.float64)
+    dur = np.asarray(dur, dtype=np.float64)
+    k = max(int(k), 1)
+    if free0 is None:
+        free0 = np.zeros(k)
+    free0 = np.asarray(free0, dtype=np.float64)
+    if ready.shape[0] == 0:
+        return np.zeros(0), np.sort(free0)
+    if k == 1:
+        stats["lindley"] += 1
+        ends = _lindley(ready, dur, float(np.max(free0, initial=0.0)))
+        return ends, ends[-1:].copy()
+    if k >= len(ready) and float(free0.max()) <= float(ready.min()):
+        stats["idle"] += 1
+        ends = np.maximum(ready, 0.0) + dur if not free0.any() else \
+            ready + dur
+        state = np.sort(np.concatenate([np.sort(free0)[len(ready):], ends]))
+        return ends, state
+    stats["sweep"] += 1
+    return _sweep(ready, dur, k, free0, return_state=True)
+
+
+def _sweep(ready: np.ndarray, dur: np.ndarray, k: int,
+           free0: np.ndarray | None = None, return_state: bool = False):
     """Earliest-free k-server FIFO, one heap op per job and nothing else."""
-    free = [0.0] * k
+    free = [0.0] * k if free0 is None else \
+        np.asarray(free0, dtype=np.float64).tolist()
+    heapq.heapify(free)
     replace = heapq.heapreplace
     ends: list[float] = []
     append = ends.append
@@ -82,10 +134,19 @@ def _sweep(ready: np.ndarray, dur: np.ndarray, k: int) -> np.ndarray:
         e = (a if a > f else f) + t
         append(e)
         replace(free, e)
+    if return_state:
+        return np.asarray(ends), np.sort(free)
     return np.asarray(ends)
 
 
-def _lindley(ready: np.ndarray, dur: np.ndarray) -> np.ndarray:
-    """Exact single-server FIFO via the unrolled Lindley recurrence."""
+def _lindley(ready: np.ndarray, dur: np.ndarray, f0: float = 0.0) -> np.ndarray:
+    """Exact single-server FIFO via the unrolled Lindley recurrence,
+    extended to a carried prefix: ``f0`` is the server's free time before
+    the first job (``e_{-1}``), so the first accumulate term is
+    ``max(ready_0, f0)``."""
     T = np.cumsum(dur)
-    return T + np.maximum.accumulate(ready - (T - dur))
+    adj = ready - (T - dur)
+    if f0 > adj[0]:
+        adj = adj.copy()
+        adj[0] = f0
+    return T + np.maximum.accumulate(adj)

@@ -17,7 +17,11 @@ fleet needs (DESIGN.md §5 fault tolerance):
 - straggler mitigation: hedged re-dispatch — if a sub-query's latency
   exceeds the p99-based hedge threshold, a duplicate fires to the
   next-fastest server and the first completion wins (classic tail-at-scale
-  hedging).
+  hedging).  :meth:`QueryRouter.hedge_assign` picks the duplicate's target
+  per straggler — the fastest slot, *other than the primary*, that accepts
+  queries at the hedge's issue time; the cluster runtime then admits the
+  duplicate into that slot's **live** queue (it contends with the slot's
+  in-flight work, not its unloaded service time).
 """
 from __future__ import annotations
 
@@ -113,6 +117,24 @@ class QueryRouter:
         return out
 
     # -- hedging -------------------------------------------------------------
+
+    def hedge_assign(self, primary: np.ndarray,
+                     t_issue: np.ndarray) -> np.ndarray:
+        """Hedge target per straggler: the highest-QPS slot other than the
+        straggler's ``primary`` slot that accepts queries at the hedge's
+        issue time (``-1`` when no such slot exists — loading, draining and
+        failed slots can't take a duplicate).  The caller admits the
+        duplicate into the target's live queue at ``t_issue``."""
+        primary = np.asarray(primary, np.int64)
+        t_issue = np.asarray(t_issue, np.float64)
+        out = np.full(len(primary), -1, np.int64)
+        for j, (p, ti) in enumerate(zip(primary.tolist(), t_issue.tolist())):
+            best, best_qps = -1, -1.0
+            for i, s in enumerate(self.slots):
+                if i != p and s.qps > best_qps and s.accepts(ti):
+                    best, best_qps = i, s.qps
+            out[j] = best
+        return out
 
     def hedge_threshold(self) -> float:
         if len(self._lat_samples) < 32:

@@ -440,13 +440,21 @@ def _fusion_groups(sub_a, sub_s, d, fuse):
     return starts, totals
 
 
-def _accel_pipeline(ready, tl, te, m):
+def _accel_pipeline(ready, tl, te, m, colo0=None, link0=0.0, eng0=0.0,
+                    return_state=False):
     """Fused launches through admission (earliest of m co-location slots,
-    held until engine completion) -> serialized link -> serialized engine."""
-    colo = [0.0] * max(m, 1)
+    held until engine completion) -> serialized link -> serialized engine.
+
+    ``colo0``/``link0``/``eng0`` seed the resources' initial free times (a
+    continuous-time caller's carried backlog; defaults reproduce the idle
+    start bit-for-bit).  With ``return_state`` the end state
+    ``(colo free times sorted, link_free, eng_free)`` is returned too."""
+    colo = [0.0] * max(m, 1) if colo0 is None else \
+        np.asarray(colo0, dtype=np.float64).tolist()
+    heapq.heapify(colo)
     replace = heapq.heapreplace
-    link_free = 0.0
-    eng_free = 0.0
+    link_free = float(link0)
+    eng_free = float(eng0)
     out: list[float] = []
     append = out.append
     for r, l, t in zip(ready.tolist(), tl.tolist(), te.tolist()):
@@ -459,6 +467,8 @@ def _accel_pipeline(ready, tl, te, m):
         eng_free = e_end
         replace(colo, e_end)
         append(e_end)
+    if return_state:
+        return np.asarray(out), (np.sort(colo), link_free, eng_free)
     return np.asarray(out)
 
 

@@ -24,7 +24,7 @@ except ImportError:  # dev-only dep (requirements-dev.txt): skip ONLY the
 from repro.configs.paper_models import paper_profile
 from repro.core.devices import SERVER_TYPES
 from repro.core.partition import enumerate_placements
-from repro.serving.engine import fifo_finish
+from repro.serving.engine import fifo_finish, fifo_finish_state
 from repro.serving.simulator import (
     SchedConfig,
     SimCache,
@@ -115,6 +115,77 @@ class TestFifoFinish:
         assert np.allclose(fifo_finish(ready, dur, k),
                            fifo_finish(ready, dur, k, slow=True),
                            rtol=1e-9, atol=1e-9)
+
+
+class TestCarriedPrefix:
+    """Continuous-time windows: splitting a stream at any point and
+    carrying the pool's end state (``fifo_finish_state``) into the second
+    half must reproduce the unsplit run — backlog conservation at the
+    engine level, for every k regime (Lindley closed form, idle pool,
+    scalar sweep)."""
+
+    def _roundtrip(self, ready, dur, k, cut):
+        whole = fifo_finish(ready, dur, k)
+        e1, state = fifo_finish_state(ready[:cut], dur[:cut], k)
+        e2, _ = fifo_finish_state(ready[cut:], dur[cut:], k, free0=state)
+        np.testing.assert_allclose(np.concatenate([e1, e2]), whole,
+                                   rtol=1e-12, atol=1e-12)
+
+    def test_split_equals_whole_across_regimes(self):
+        rng = np.random.default_rng(7)
+        for trial in range(40):
+            n = int(rng.integers(2, 200))
+            k = int(rng.integers(1, 10))
+            ready = rng.exponential(0.2, n).cumsum()
+            dur = rng.uniform(0.05, 1.5, n)
+            self._roundtrip(ready, dur, k, int(rng.integers(1, n)))
+
+    def test_free0_none_is_idle_pool(self):
+        rng = np.random.default_rng(1)
+        ready = rng.exponential(0.2, 50).cumsum()
+        dur = rng.uniform(0.05, 1.0, 50)
+        for k in (1, 3, 100):
+            idle = fifo_finish(ready, dur, k)
+            seeded = fifo_finish(ready, dur, k, free0=np.zeros(k))
+            np.testing.assert_allclose(seeded, idle, rtol=1e-12, atol=0)
+
+    def test_busy_prefix_delays_first_jobs(self):
+        # a server still busy until t=10 cannot start earlier than that
+        ready = np.array([0.0, 1.0, 2.0])
+        dur = np.ones(3)
+        out = fifo_finish(ready, dur, 1, free0=np.array([10.0]))
+        assert np.allclose(out, [11.0, 12.0, 13.0])
+        ends, state = fifo_finish_state(ready, dur, 2,
+                                        free0=np.array([10.0, 0.0]))
+        # the idle second server takes jobs while the busy one drains
+        assert ends[0] == 1.0 and state.shape == (2,)
+        ref = fifo_finish(ready, dur, 2, slow=True,
+                          free0=np.array([10.0, 0.0]))
+        np.testing.assert_allclose(ends, ref)
+
+    def test_idle_shortcut_state_matches_sweep(self):
+        # k >= n with every server free before the first arrival: the
+        # vectorized shortcut's ends AND end state must equal the heap's
+        from repro.serving.engine import _sweep
+
+        rng = np.random.default_rng(5)
+        ready = np.sort(rng.uniform(10.0, 20.0, 6))
+        dur = rng.uniform(0.1, 1.0, 6)
+        free0 = rng.uniform(0.0, 9.0, 10)
+        ends, state = fifo_finish_state(ready, dur, 10, free0=free0)
+        ref_ends, ref_state = _sweep(ready, dur, 10, free0,
+                                     return_state=True)
+        np.testing.assert_allclose(ends, ref_ends, rtol=0, atol=0)
+        np.testing.assert_allclose(state, ref_state, rtol=0, atol=0)
+
+    def test_state_matches_reference_heap(self):
+        rng = np.random.default_rng(3)
+        ready = rng.exponential(0.1, 80).cumsum()
+        dur = rng.uniform(0.1, 0.8, 80)
+        free0 = rng.uniform(0.0, 5.0, 4)
+        fast = fifo_finish(ready, dur, 4, free0=free0)
+        slow = fifo_finish(ready, dur, 4, slow=True, free0=free0)
+        np.testing.assert_allclose(fast, slow, rtol=1e-12, atol=0)
 
 
 class TestSimulatorEquivalence:

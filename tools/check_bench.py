@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Bench-regression gate (CI `bench-gate` job).
+
+Compares freshly-run smoke benchmark outputs against checked-in baselines
+with explicit tolerances, and validates the invariants behind the repo's
+headline claims, so a PR that quietly regresses the serving stack fails in
+CI rather than in the next full bench regeneration:
+
+- ``--smoke-json`` (from ``benchmarks/bench_cluster.py --smoke``) vs
+  ``--baseline`` (``benchmarks/baselines/BENCH_cluster_smoke.json``):
+  hercules must stay feasible, meet every workload's SLA in every
+  measured interval, and beat greedy on peak provisioned power; power and
+  attainment metrics must stay within tolerance of the baseline.  The
+  simulation is seeded + CRN, so these numbers are deterministic — the
+  tolerances absorb float-library drift, not noise.
+- ``--search-csv`` (from ``benchmarks/bench_gradient_search.py --smoke``):
+  the gradient search must stay near-optimal and meaningfully cheaper
+  than exhaustive.  Wall-clock ratios on shared CI runners are noisy, so
+  the speedup floor is deliberately loose — the 10-minute job timeout is
+  the real wall-clock budget.
+- ``--full-json`` (the checked-in ``BENCH_cluster.json``): consistency of
+  the committed full-run record — the savings claim is validated at query
+  granularity and the SLA-over-the-day series is present and clean.
+
+Exit code 0 = all gates green; 1 = regression (each failure is printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# Tolerances (explicit, documented):
+POWER_RTOL = 0.02        # relative drift allowed on provisioned power
+SAVING_ATOL = 0.02       # absolute drift on the hercules-vs-greedy saving
+ATTAIN_ATOL = 0.02       # absolute drop allowed on day-level attainment
+INTERVAL_ATTAIN_ATOL = 0.05  # absolute drop on the worst interval
+MIN_OPTIMALITY = 0.93    # gradient search vs exhaustive (measured: 95.1%)
+MIN_SEARCH_SPEEDUP = 1.5  # gradient vs exhaustive wall-clock (loose)
+
+_failures: list[str] = []
+
+
+def check(ok: bool, what: str, detail: str = "") -> None:
+    mark = "ok  " if ok else "FAIL"
+    print(f"[{mark}] {what}" + (f"  ({detail})" if detail else ""))
+    if not ok:
+        _failures.append(what)
+
+
+def _load(path: str) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# cluster smoke vs baseline
+# ---------------------------------------------------------------------------
+
+
+def check_cluster_smoke(smoke_path: str, baseline_path: str) -> None:
+    got = _load(smoke_path)
+    base = _load(baseline_path)
+
+    h = got["policies"]["hercules"]
+    g = got["policies"]["greedy"]
+    check(h["feasible"], "hercules smoke day feasible")
+    check(h["all_meet_sla"], "hercules meets every workload SLA (day level)")
+    check(g["all_meet_sla"], "greedy meets every workload SLA (day level)")
+    check(got["savings"]["validated_at_query_granularity"],
+          "savings validated at query granularity")
+    check(got["savings"]["hercules_all_intervals_meet_sla"],
+          "hercules meets SLA in every measured interval (Fig. 8b gate)")
+    check(h["peak_power_w"] < g["peak_power_w"],
+          "hercules beats greedy on peak provisioned power",
+          f"{h['peak_power_w']:.0f}W vs {g['peak_power_w']:.0f}W")
+
+    s_got = got["savings"]["hercules_vs_greedy_power_peak"]
+    s_base = base["savings"]["hercules_vs_greedy_power_peak"]
+    check(abs(s_got - s_base) <= SAVING_ATOL,
+          "peak power saving within tolerance of baseline",
+          f"got {s_got:.3f}, baseline {s_base:.3f}, atol {SAVING_ATOL}")
+
+    for pol in ("greedy", "hercules"):
+        p_got = got["policies"][pol]["peak_power_w"]
+        p_base = base["policies"][pol]["peak_power_w"]
+        check(abs(p_got - p_base) <= POWER_RTOL * p_base,
+              f"{pol} peak power within {POWER_RTOL:.0%} of baseline",
+              f"got {p_got:.0f}W, baseline {p_base:.0f}W")
+        for name, w_base in base["policies"][pol]["workloads"].items():
+            w_got = got["policies"][pol]["workloads"][name]
+            check(w_got["sla_attainment"] >=
+                  w_base["sla_attainment"] - ATTAIN_ATOL,
+                  f"{pol}/{name} day attainment no worse than baseline",
+                  f"got {w_got['sla_attainment']:.4f}, "
+                  f"baseline {w_base['sla_attainment']:.4f}")
+    for name, s in got["policies"]["hercules"]["sla_over_day"].items():
+        vals = [a for a in s["sla_attainment"] if a is not None]
+        base_s = base["policies"]["hercules"]["sla_over_day"][name]
+        base_vals = [a for a in base_s["sla_attainment"] if a is not None]
+        check(len(vals) > 0 and
+              min(vals) >= min(base_vals) - INTERVAL_ATTAIN_ATOL,
+              f"hercules/{name} worst-interval attainment within tolerance",
+              f"got {min(vals):.4f}, baseline {min(base_vals):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# gradient-search smoke CSV
+# ---------------------------------------------------------------------------
+
+
+def _parse_derived(field: str) -> dict[str, str]:
+    return dict(kv.split("=", 1) for kv in field.split(";") if "=" in kv)
+
+
+def check_search_csv(csv_path: str) -> None:
+    rows = [ln.strip() for ln in
+            pathlib.Path(csv_path).read_text().splitlines()
+            if ln.startswith("alg1_")]
+    check(len(rows) > 0, "search smoke CSV has alg1_* rows", csv_path)
+    for ln in rows:
+        name, _, derived = ln.split(",", 2)
+        kv = _parse_derived(derived)
+        opt = float(kv["optimality"].rstrip("%")) / 100.0
+        speedup = float(kv["search_speedup"].rstrip("x"))
+        check(opt >= MIN_OPTIMALITY,
+              f"{name}: gradient search optimality >= "
+              f"{MIN_OPTIMALITY:.0%}", f"got {opt:.1%}")
+        check(speedup >= MIN_SEARCH_SPEEDUP,
+              f"{name}: search speedup >= {MIN_SEARCH_SPEEDUP}x vs "
+              "exhaustive", f"got {speedup:.1f}x")
+
+
+# ---------------------------------------------------------------------------
+# committed full-run record consistency
+# ---------------------------------------------------------------------------
+
+
+def check_full_record(full_path: str) -> None:
+    full = _load(full_path)
+    check(full["savings"]["validated_at_query_granularity"],
+          "committed BENCH_cluster.json: savings validated")
+    check(full["savings"]["hercules_vs_greedy_power_peak"] > 0.0,
+          "committed BENCH_cluster.json: positive peak power saving",
+          f"{full['savings']['hercules_vs_greedy_power_peak']:.3f}")
+    check(full["savings"].get("hercules_all_intervals_meet_sla", False),
+          "committed BENCH_cluster.json: SLA met over the whole day")
+    n_steps = full["n_steps"]
+    for pol, p in full["policies"].items():
+        sod = p.get("sla_over_day", {})
+        check(set(sod) == set(p["workloads"]),
+              f"committed record: {pol} has a per-workload SLA series")
+        for name, s in sod.items():
+            check(len(s["sla_attainment"]) == n_steps,
+                  f"committed record: {pol}/{name} series spans the day",
+                  f"{len(s['sla_attainment'])} vs {n_steps} intervals")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke-json", help="fresh bench_cluster --smoke output")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_cluster_smoke.json",
+                    help="checked-in smoke baseline to compare against")
+    ap.add_argument("--search-csv",
+                    help="fresh bench_gradient_search --smoke CSV")
+    ap.add_argument("--full-json",
+                    help="committed BENCH_cluster.json to sanity-check")
+    args = ap.parse_args()
+    if not (args.smoke_json or args.search_csv or args.full_json):
+        ap.error("nothing to check: pass --smoke-json, --search-csv "
+                 "and/or --full-json")
+    if args.smoke_json:
+        check_cluster_smoke(args.smoke_json, args.baseline)
+    if args.search_csv:
+        check_search_csv(args.search_csv)
+    if args.full_json:
+        check_full_record(args.full_json)
+    if _failures:
+        print(f"\n{len(_failures)} bench gate(s) FAILED:")
+        for f in _failures:
+            print(f"  - {f}")
+        return 1
+    print("\nall bench gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
