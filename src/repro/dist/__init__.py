@@ -1,6 +1,7 @@
 """Distributed execution layer: logical-axis sharding, spec trees, and the
 sharded dataflows (embedding Psum, expert-parallel MoE, vocab-parallel CE,
-vertex-partition GNN) that back the mesh/dry-run paths.
+vertex-partition GNN, seq-sharded flash decode) that back the mesh/dry-run
+paths.
 
 Submodules import lazily where they touch model code so that
 ``repro.dist.logical`` / ``repro.dist.sharding`` stay importable from

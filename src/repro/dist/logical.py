@@ -84,6 +84,25 @@ def constrain(x, axes):
     )
 
 
+def bound_axes(name: str) -> tuple:
+    """Mesh axes bound to one logical name, normalized to a tuple.
+
+    () when there is no binding context, the name is unbound, or it is
+    bound to None — callers can treat "replicated" uniformly. This is how
+    repro.dist.decode discovers the "kv_seq" axes of a sequence-sharded
+    KV cache.
+    """
+    ctx = _context()
+    if ctx is None:
+        return ()
+    axes = ctx[1].get(name)
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
 def model_axis_name():
     """Mesh axis bound to the logical "model" axis, or None.
 

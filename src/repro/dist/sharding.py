@@ -42,11 +42,38 @@ def logical_rules(kind: ArchKind, multi_pod: bool = False) -> dict:
             ffn="model",
             vocab="model",
             expert="model",
+            kv_seq=None,         # decode cells bind this (kv_seq_axes)
         )
     elif kind == ArchKind.GNN:
         # vertex/edge partition spreads the graph over the whole mesh
         rules["nodes"] = dp + ("model",)
     return rules
+
+
+def kv_seq_axes(batch: int, multi_pod: bool = False) -> tuple[str, ...]:
+    """Mesh axes the decode KV cache's sequence dimension shards over.
+
+    Large-batch decode (decode_32k) shards batch over the data axes and
+    sequence over "model" only; batch == 1 (long_500k) has no batch
+    parallelism to exploit, so the sequence takes every mesh axis.  The
+    "kv_seq" logical rule binds to this, and repro.dist.decode reads it to
+    pick the cross-shard merge axes.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return dp + ("model",) if batch < 16 else ("model",)
+
+
+def kv_cache_spec(batch: int, multi_pod: bool = False) -> P:
+    """PartitionSpec for one stacked KV-cache leaf [L, B, S, KVH, hd].
+
+    Sequence shards over :func:`kv_seq_axes`; batch over the data axes
+    when it is large enough to split.  Rank-5 int8-scale leaves
+    ([L, B, S, KVH, 1]) take the same spec — only S is sharded.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if batch >= 16:
+        return P(None, dp, kv_seq_axes(batch, multi_pod), None, None)
+    return P(None, None, kv_seq_axes(batch, multi_pod), None, None)
 
 
 def _path_names(path) -> list[str]:

@@ -1,4 +1,9 @@
+from repro.kernels.flash_attention.flash_decode import (
+    flash_decode_partials,
+    lse_combine,
+)
 from repro.kernels.flash_attention.ops import flash_attention, flash_decode
 from repro.kernels.flash_attention.ref import attention_ref
 
-__all__ = ["flash_attention", "flash_decode", "attention_ref"]
+__all__ = ["flash_attention", "flash_decode", "flash_decode_partials",
+           "lse_combine", "attention_ref"]

@@ -9,6 +9,12 @@ combines with a log-sum-exp merge. The same merge (exposed as
 uses to combine per-shard partials across the model axis for the long_500k
 cell, so the on-chip and cross-chip schedules share one correctness oracle.
 
+Positions are GLOBAL: ``kv_offset`` is the base position of k/v's first row
+(a traced scalar — each shard of a sequence-sharded cache passes its own
+base), and ``kv_len`` masks against global position, so a shard whose slice
+starts past ``kv_len`` contributes an empty partial rather than requiring
+the caller to pre-truncate.
+
 Grid (B*KVH, n_chunks): per (batch x kv-head), each chunk produces
 partials; group query heads for that kv head are processed together as a
 [group, hd] tile (GQA: the MXU sees a [group, bk] x [bk, hd] matmul).
@@ -25,18 +31,28 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *, scale, kv_len,
-                   bk):
-    """One KV chunk: q [group, hd]; k/v [bk, hd] -> partial m/l/o."""
+def _decode_kernel(off_ref, q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *,
+                   scale, kv_len, bk):
+    """One KV chunk: q [group, hd]; k/v [bk, hd] -> partial m/l/o.
+
+    off_ref holds the global position of k/v row 0 (shard base offset);
+    chunk c covers global positions off + [c*bk, (c+1)*bk).
+    """
     c = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)              # [group, hd]
     k = k_ref[0].astype(jnp.float32)              # [bk, hd]
     v = v_ref[0].astype(jnp.float32)
     s = (q @ k.T) * scale                         # [group, bk]
-    kpos = c * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    kpos = off_ref[0, 0] + c * bk + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
     s = jnp.where(kpos < kv_len, s, NEG_INF)
     m = s.max(axis=1, keepdims=True)              # [group, 1]
     p = jnp.exp(s - m)
+    # fully-masked chunk: m == NEG_INF and p == 1 everywhere; zero the
+    # weights so the partial is exactly empty (l = 0, o = 0) instead of
+    # relying on a downstream merge to suppress it — the partial itself is
+    # part of the distributed-decode contract.
+    p = jnp.where(kpos < kv_len, p, 0.0)
     l = p.sum(axis=1, keepdims=True)
     o = p @ v                                     # [group, hd]
     m_ref[0, 0] = m
@@ -57,10 +73,16 @@ def lse_combine(m, l, o, axis: int):
 
 
 @functools.partial(jax.jit, static_argnames=("kv_len", "bk", "interpret"))
-def flash_decode_pallas(q, k, v, *, kv_len, bk=512, interpret=False):
-    """q [B, 1, H, hd]; k/v [B, S, KVH, hd]; kv_len: live cache length.
+def flash_decode_partials(q, k, v, *, kv_len, kv_offset=0, bk=512,
+                          interpret=False):
+    """Per-(batch, kv-head, group) softmax partials over a KV slice.
 
-    Returns [B, 1, H, hd]."""
+    q [B, 1, H, hd]; k/v [B, S, KVH, hd] holding global positions
+    [kv_offset, kv_offset + S); kv_len masks against global position.
+    Returns (m, l, o) float32 of shapes [B, KVH, group, 1] x2 and
+    [B, KVH, group, hd], already merged over the local chunks — the
+    caller (repro.dist.decode) merges across shards with ``lse_combine``.
+    """
     B, _, H, hd = q.shape
     S, KVH = k.shape[1], k.shape[2]
     group = H // KVH
@@ -72,6 +94,7 @@ def flash_decode_pallas(q, k, v, *, kv_len, bk=512, interpret=False):
     qf = q.reshape(B, KVH, group, hd).reshape(B * KVH, group, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(B * KVH, S, hd)
+    off = jnp.asarray(kv_offset, jnp.int32).reshape(1, 1)
 
     grid = (B * KVH, n_chunks)
     kernel = functools.partial(
@@ -81,6 +104,7 @@ def flash_decode_pallas(q, k, v, *, kv_len, bk=512, interpret=False):
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda h, c: (0, 0)),
             pl.BlockSpec((1, group, hd), lambda h, c: (h, 0, 0)),
             pl.BlockSpec((1, bk, hd), lambda h, c: (h, c, 0)),
             pl.BlockSpec((1, bk, hd), lambda h, c: (h, c, 0)),
@@ -96,7 +120,23 @@ def flash_decode_pallas(q, k, v, *, kv_len, bk=512, interpret=False):
             jax.ShapeDtypeStruct((B * KVH, n_chunks, group, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf)
-    _, l_c, o_c = lse_combine(m, l, o, axis=1)    # over chunks
+    )(off, qf, kf, vf)
+    m_c, l_c, o_c = lse_combine(m, l, o, axis=1)  # over local chunks
+    return (m_c.reshape(B, KVH, group, 1),
+            l_c.reshape(B, KVH, group, 1),
+            o_c.reshape(B, KVH, group, hd))
+
+
+@functools.partial(jax.jit, static_argnames=("kv_len", "bk", "interpret"))
+def flash_decode_pallas(q, k, v, *, kv_len, kv_offset=0, bk=512,
+                        interpret=False):
+    """q [B, 1, H, hd]; k/v [B, S, KVH, hd]; kv_len: live cache length.
+
+    Returns [B, 1, H, hd]."""
+    B, _, H, hd = q.shape
+    _, l_c, o_c = flash_decode_partials(
+        q, k, v, kv_len=kv_len, kv_offset=kv_offset, bk=bk,
+        interpret=interpret,
+    )
     out = (o_c / jnp.maximum(l_c, 1e-30)).astype(q.dtype)
-    return out.reshape(B, KVH, group, hd).reshape(B, 1, H, hd)
+    return out.reshape(B, H, hd).reshape(B, 1, H, hd)

@@ -19,7 +19,11 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0, bq=128, bk=128):
     )
 
 
-def flash_decode(q, k, v, *, kv_len, bk=512):
-    """Split-KV decode: q [B, 1, H, hd] against cache k/v [B, S, KVH, hd]."""
-    return flash_decode_pallas(q, k, v, kv_len=kv_len, bk=bk,
-                               interpret=not _on_tpu())
+def flash_decode(q, k, v, *, kv_len, kv_offset=0, bk=512):
+    """Split-KV decode: q [B, 1, H, hd] against cache k/v [B, S, KVH, hd].
+
+    kv_offset: global position of k/v row 0 (non-zero for a shard of a
+    sequence-sharded cache); kv_len masks against global position.
+    """
+    return flash_decode_pallas(q, k, v, kv_len=kv_len, kv_offset=kv_offset,
+                               bk=bk, interpret=not _on_tpu())

@@ -20,7 +20,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.common.types import ArchKind, ShapeSpec
 from repro.configs.registry import get_arch
 from repro.dist import logical
-from repro.dist.sharding import logical_rules, opt_spec_tree, param_spec_tree
+from repro.dist.sharding import (
+    kv_cache_spec,
+    kv_seq_axes,
+    logical_rules,
+    opt_spec_tree,
+    param_spec_tree,
+)
 from repro.models import din as din_lib
 from repro.models import dlrm as dlrm_lib
 from repro.models import gnn as gnn_lib
@@ -156,15 +162,17 @@ def _lm_cell(arch, shape: ShapeSpec, mesh, multi_pod: bool) -> CellProgram:
             return tf_lib.init(key, cfg)
 
     else:  # decode (decode_32k / long_500k): one token against an S cache
+        if mesh is not None:
+            # the seq-sharded cache is served by the distributed flash
+            # decode (repro.dist.decode) instead of falling back to a
+            # local single-block attention over a gathered cache
+            cfg = dataclasses.replace(cfg, decode_impl="flash")
         state_specs = params_shape
         state_spec_tree = p_specs
         cache_specs = tf_lib.kv_cache_specs(cfg, B, S)
         # KV sharding: batch over dp when it divides; sequence over "model"
         # (and over dp too when batch == 1 — long_500k's only option).
-        if B >= 16:
-            kv_spec = P(None, dp, "model", None, None)
-        else:
-            kv_spec = P(None, None, dp + ("model",), None, None)
+        kv_spec = kv_cache_spec(B, multi_pod)
         batch_specs = {
             "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
             "cache": cache_specs,
@@ -188,9 +196,11 @@ def _lm_cell(arch, shape: ShapeSpec, mesh, multi_pod: bool) -> CellProgram:
     if getattr(cfg, "seq_shard", False):
         rules = dict(rules)
         rules["residual_seq"] = "model"
-    if shape.step == "decode" and B < 16:
+    if shape.step == "decode":
         rules = dict(rules)
-        rules["batch"] = None  # batch=1: token replicated, KV seq-sharded
+        rules["kv_seq"] = kv_seq_axes(B, multi_pod)
+        if B < 16:
+            rules["batch"] = None  # batch=1: token replicated, KV seq-sharded
     return CellProgram(
         arch_id=arch.ARCH_ID, shape=shape, kind=kind, cfg=cfg, step_fn=step,
         state_specs=state_specs, batch_specs=batch_specs,

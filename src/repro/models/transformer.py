@@ -70,6 +70,13 @@ class LMConfig:
     # KV-cache quantization (KIVI-style per-token-per-head int8): halves the
     # cache residency -> 2x decode batch per chip (§Perf iteration).
     kv_quant: str = "none"  # "none" | "int8"
+    # one-token decode attention: "naive" single-block matmul; "flash"
+    # routes through the split-KV Pallas kernel, and — under a binding with
+    # a "kv_seq" rule (seq-sharded cache) — the cross-shard partial merge
+    # in repro.dist.decode. The launcher flips this on for mesh decode
+    # cells; it needs a static write position (decode_step from launch
+    # passes a Python int).
+    decode_impl: str = "naive"  # "naive" | "flash"
     dtype: Any = jnp.bfloat16
 
     @property
@@ -171,7 +178,13 @@ def _block_apply(params_l, x, cos, sin, cfg: LMConfig, cache_l=None, pos=None):
             kc = jax.lax.dynamic_update_slice(cache_l["k"], k, (0, pos, 0, 0))
             vc = jax.lax.dynamic_update_slice(cache_l["v"], v, (0, pos, 0, 0))
             new_cache_l = {"k": kc, "v": vc}
-        attn = attn_fn(q, kc, vc, q_offset=pos, chunk=cfg.attn_chunk)
+        if cfg.decode_impl == "flash" and T == 1 and isinstance(pos, int):
+            from repro.dist.decode import decode_attention
+
+            # decode attends kv positions j <= pos, i.e. kv_len = pos + 1
+            attn = decode_attention(q, kc, vc, kv_len=pos + 1)
+        else:
+            attn = attn_fn(q, kc, vc, q_offset=pos, chunk=cfg.attn_chunk)
     else:
         attn = attn_fn(q, k, v, q_offset=0, chunk=cfg.attn_chunk)
     x = x + logical.constrain(

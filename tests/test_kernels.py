@@ -73,6 +73,47 @@ def test_flash_decode_sweep(S, kv_len, bk):
     np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
+def test_flash_decode_offset_shard_merge():
+    """Per-shard slices with a GLOBAL kv_len + their base offset merge to
+    the full-cache answer — the repro.dist.decode contract, single-device."""
+    from repro.kernels.flash_attention.flash_decode import flash_decode_partials
+
+    B, S, H, KVH, hd = 2, 512, 8, 2, 32
+    kv_len = 300                               # ends mid-slice 2 of 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, hd))
+    parts = [
+        flash_decode_partials(q, k[:, i:i + 128], v[:, i:i + 128],
+                              kv_len=kv_len, kv_offset=i, bk=64,
+                              interpret=True)
+        for i in range(0, S, 128)
+    ]
+    m, l, o = (jnp.stack([p[j] for p in parts]) for j in range(3))
+    from repro.kernels.flash_attention.flash_decode import lse_combine
+    _, l_c, o_c = lse_combine(m, l, o, axis=0)
+    out = (o_c / jnp.maximum(l_c, 1e-30)).reshape(B, 1, H, hd)
+    ref = attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+    full = flash_decode(q, k, v, kv_len=kv_len, bk=64)
+    np.testing.assert_allclose(out, full, rtol=1e-6, atol=1e-6)
+
+
+def test_flash_decode_offset_empty_slice():
+    """A slice entirely past kv_len yields an exactly-empty partial
+    (l = 0, o = 0) instead of relying on the merge to suppress junk."""
+    from repro.kernels.flash_attention.flash_decode import flash_decode_partials
+
+    B, H, KVH, hd = 1, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, 128, KVH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, 128, KVH, hd))
+    m, l, o = flash_decode_partials(q, k, v, kv_len=200, kv_offset=256, bk=64,
+                                    interpret=True)
+    assert np.all(np.asarray(l) == 0.0)
+    assert np.all(np.asarray(o) == 0.0)
+
+
 def test_lse_combine_associativity():
     """Hierarchical merge == flat merge (the distributed-decode invariant)."""
     rng = np.random.default_rng(0)

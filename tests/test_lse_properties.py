@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the split-softmax merge (``lse_combine``).
+
+The merge is the shared correctness oracle of the on-chip chunk combine
+(kernels/flash_attention/flash_decode.py) and the cross-shard combine
+(repro.dist.decode): it must be permutation-invariant over the merge axis
+(all-gather order across a multi-axis shard is unspecified), associative
+under hierarchical (chunk-then-shard) merging, and agree with a dense
+log-sum-exp reference when the partials come from chunks of one score
+matrix."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_decode import NEG_INF, lse_combine
+
+
+def _random_partials(rng, n, group, hd, with_empty=False):
+    """Partials as the decode kernel emits them: m is a max of logits, l a
+    positive denominator, o a weighted value sum; optionally some entries
+    are the empty partial (m=NEG_INF, l=0, o=0) a fully-masked shard emits."""
+    m = rng.normal(scale=3.0, size=(n, group, 1)).astype(np.float32)
+    l = rng.uniform(0.1, 4.0, (n, group, 1)).astype(np.float32)
+    o = rng.normal(size=(n, group, hd)).astype(np.float32)
+    if with_empty and n > 1:
+        k = rng.integers(1, n)
+        idx = rng.choice(n, size=k, replace=False)
+        m[idx], l[idx], o[idx] = NEG_INF, 0.0, 0.0
+    return jnp.asarray(m), jnp.asarray(l), jnp.asarray(o)
+
+
+def _finalize(l, o):
+    return np.asarray(o / np.maximum(l[..., :1], 1e-30))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    group=st.integers(1, 4),
+    hd=st.integers(1, 16),
+    with_empty=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lse_combine_permutation_invariant(n, group, hd, with_empty, seed):
+    rng = np.random.default_rng(seed)
+    m, l, o = _random_partials(rng, n, group, hd, with_empty)
+    perm = rng.permutation(n)
+    _, l_a, o_a = lse_combine(m, l, o, axis=0)
+    _, l_b, o_b = lse_combine(m[perm], l[perm], o[perm], axis=0)
+    np.testing.assert_allclose(_finalize(l_a, o_a), _finalize(l_b, o_b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    split=st.integers(1, 15),
+    group=st.integers(1, 3),
+    hd=st.integers(1, 8),
+    with_empty=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lse_combine_hierarchical_associative(n, split, group, hd, with_empty,
+                                              seed):
+    """chunk-then-shard == flat: merging each sub-range first, then merging
+    the merged partials, matches one flat merge (the distributed decode is
+    exactly this two-level tree)."""
+    split = min(split, n - 1)
+    rng = np.random.default_rng(seed)
+    m, l, o = _random_partials(rng, n, group, hd, with_empty)
+    _, l_f, o_f = lse_combine(m, l, o, axis=0)
+    m1, l1, o1 = lse_combine(m[:split], l[:split], o[:split], axis=0)
+    m2, l2, o2 = lse_combine(m[split:], l[split:], o[split:], axis=0)
+    _, l_h, o_h = lse_combine(jnp.stack([m1, m2]), jnp.stack([l1, l2]),
+                              jnp.stack([o1, o2]), axis=0)
+    np.testing.assert_allclose(_finalize(l_f, o_f), _finalize(l_h, o_h),
+                               rtol=1e-5, atol=1e-6)
+    # the combined (m, l) themselves agree, so any deeper tree nests too
+    np.testing.assert_allclose(np.asarray(l_f), np.asarray(l_h),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_chunks=st.integers(1, 8),
+    bk=st.integers(1, 16),
+    group=st.integers(1, 3),
+    hd=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lse_combine_matches_dense_softmax(n_chunks, bk, group, hd, seed):
+    """Partials built from chunks of one dense score matrix merge to the
+    dense softmax-weighted value sum (log-sum-exp reference)."""
+    rng = np.random.default_rng(seed)
+    s = rng.normal(scale=2.0, size=(group, n_chunks * bk)).astype(np.float32)
+    vals = rng.normal(size=(n_chunks * bk, hd)).astype(np.float32)
+
+    ms, ls, os_ = [], [], []
+    for c in range(n_chunks):
+        sc = s[:, c * bk:(c + 1) * bk]
+        m_c = sc.max(axis=1, keepdims=True)
+        p = np.exp(sc - m_c)
+        ms.append(m_c)
+        ls.append(p.sum(axis=1, keepdims=True))
+        os_.append(p @ vals[c * bk:(c + 1) * bk])
+    m = jnp.asarray(np.stack(ms))
+    l = jnp.asarray(np.stack(ls))
+    o = jnp.asarray(np.stack(os_))
+
+    _, l_c, o_c = lse_combine(m, l, o, axis=0)
+    got = _finalize(l_c, o_c)
+
+    probs = np.exp(s - s.max(axis=1, keepdims=True))
+    probs /= probs.sum(axis=1, keepdims=True)
+    want = probs @ vals
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

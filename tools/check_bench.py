@@ -21,6 +21,12 @@ CI rather than in the next full bench regeneration:
 - ``--full-json`` (the checked-in ``BENCH_cluster.json``): consistency of
   the committed full-run record — the savings claim is validated at query
   granularity and the SLA-over-the-day series is present and clean.
+- ``--budget-seconds`` + ``--timing name=seconds`` (one per smoke bench,
+  measured by the CI step around each run): every bench must finish under
+  the wall budget, so a silent engine slowdown fails the gate even when
+  every metric still matches its baseline.  The budget is loose (~5x the
+  measured smoke time) because shared runners are noisy; it exists to
+  catch order-of-magnitude regressions, not percent-level drift.
 
 Exit code 0 = all gates green; 1 = regression (each failure is printed).
 """
@@ -132,6 +138,25 @@ def check_search_csv(csv_path: str) -> None:
 
 
 # ---------------------------------------------------------------------------
+# wall-clock budgets
+# ---------------------------------------------------------------------------
+
+
+def check_wall_budgets(budget_s: float, timings: list[str]) -> None:
+    check(len(timings) > 0, "wall budget given with at least one --timing")
+    for t in timings:
+        name, _, secs = t.partition("=")
+        try:
+            wall = float(secs)
+        except ValueError:
+            check(False, f"{name}: unparsable --timing value", repr(secs))
+            continue
+        check(wall <= budget_s,
+              f"{name}: wall clock within {budget_s:.0f}s budget",
+              f"took {wall:.0f}s")
+
+
+# ---------------------------------------------------------------------------
 # committed full-run record consistency
 # ---------------------------------------------------------------------------
 
@@ -166,16 +191,28 @@ def main() -> int:
                     help="fresh bench_gradient_search --smoke CSV")
     ap.add_argument("--full-json",
                     help="committed BENCH_cluster.json to sanity-check")
+    ap.add_argument("--budget-seconds", type=float,
+                    help="per-bench wall-clock budget asserted over every "
+                         "--timing")
+    ap.add_argument("--timing", action="append", default=[],
+                    metavar="NAME=SECONDS",
+                    help="measured wall clock of one smoke bench "
+                         "(repeatable; requires --budget-seconds)")
     args = ap.parse_args()
-    if not (args.smoke_json or args.search_csv or args.full_json):
-        ap.error("nothing to check: pass --smoke-json, --search-csv "
-                 "and/or --full-json")
+    if not (args.smoke_json or args.search_csv or args.full_json
+            or args.budget_seconds):
+        ap.error("nothing to check: pass --smoke-json, --search-csv, "
+                 "--full-json and/or --budget-seconds")
+    if args.timing and args.budget_seconds is None:
+        ap.error("--timing requires --budget-seconds")
     if args.smoke_json:
         check_cluster_smoke(args.smoke_json, args.baseline)
     if args.search_csv:
         check_search_csv(args.search_csv)
     if args.full_json:
         check_full_record(args.full_json)
+    if args.budget_seconds is not None:
+        check_wall_budgets(args.budget_seconds, args.timing)
     if _failures:
         print(f"\n{len(_failures)} bench gate(s) FAILED:")
         for f in _failures:
