@@ -1,0 +1,29 @@
+"""Repo-aware static analysis for the Hercules reproduction.
+
+Four AST passes enforce whole-repo invariants the test suite can only
+sample: sharding axis-name consistency against ``dist/sharding.py``'s rule
+tables, Pallas BlockSpec/grid/index-map discipline, simulated-path
+determinism (seeded-Generator-only RNG, virtual clocks, no set-order
+leaks), and jit purity.  Run with ``python -m repro.analysis`` — see
+``docs/static_analysis.md`` for the rule catalog and suppression syntax
+(``# repro: ignore[rule]``).
+
+The package imports no jax: it must load (and run in CI) in any Python.
+"""
+from repro.analysis.core import (
+    Finding,
+    RepoFacts,
+    Report,
+    analyze_file,
+    analyze_paths,
+    rule_catalog,
+)
+
+__all__ = [
+    "Finding",
+    "RepoFacts",
+    "Report",
+    "analyze_file",
+    "analyze_paths",
+    "rule_catalog",
+]

@@ -1,0 +1,389 @@
+"""Lint framework: findings, suppressions, repo facts, and the runner.
+
+The analyzer is a plain-``ast`` walk — no jax import, no code execution —
+so it runs in any environment (including the no-jax import guard in
+``tests/test_imports.py``) and costs milliseconds per file.  Each pass is
+a module exposing ``RULES`` (rule name -> one-line description) and
+``run(ctx)`` yielding :class:`Finding`s; the runner parses each file once,
+hands the shared :class:`FileContext` to every pass, and filters findings
+whose line carries a ``# repro: ignore[rule]`` suppression.
+
+Repo-specific knowledge (which logical/mesh axis names exist) is read
+from ``repro/dist/sharding.py``'s rule tables at analysis time — see
+:class:`RepoFacts` — so the sharding pass tracks the source of truth
+instead of a hardcoded copy.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+
+SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore(?:\[([^\]]+)\])?")
+
+# directories never descended into; "analysis_fixtures" additionally gated
+# by include_fixtures (the known-bad lint corpus must not fail the repo)
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "artifacts", ".github"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit, anchored to a file/line for suppression + diffing."""
+
+    file: str  # posix path as given on the command line (repo-relative in CI)
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule}: {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain rooted at a Name, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def import_map(tree: ast.Module) -> dict[str, str]:
+    """Local binding name -> fully qualified module/object path.
+
+    ``import numpy as np`` -> {"np": "numpy"}; ``from jax.sharding import
+    PartitionSpec as P`` -> {"P": "jax.sharding.PartitionSpec"}.  Collected
+    from every import statement in the file (not just module level) so
+    function-local imports resolve too.
+    """
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_call(node: ast.AST, imports: dict[str, str]) -> str | None:
+    """Fully qualified dotted path of a call target, through import aliases.
+
+    ``np.random.rand`` with ``import numpy as np`` -> "numpy.random.rand";
+    ``P(...)`` with ``from jax.sharding import PartitionSpec as P`` ->
+    "jax.sharding.PartitionSpec".  None when the chain is not rooted at an
+    imported name (locals, attributes of call results, ...).
+    """
+    dotted = dotted_name(node)
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    base = imports.get(head)
+    if base is None:
+        return None
+    return f"{base}.{rest}" if rest else base
+
+
+def parent_map(tree: ast.Module) -> dict[ast.AST, ast.AST]:
+    return {
+        child: parent
+        for parent in ast.walk(tree)
+        for child in ast.iter_child_nodes(parent)
+    }
+
+
+def enclosing_function(node: ast.AST, parents: dict) -> ast.AST | None:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def literal_tuple(node: ast.AST, scope: ast.AST | None) -> ast.Tuple | None:
+    """Resolve ``node`` to a literal Tuple, following one level of simple
+    ``name = (…)`` assignment inside ``scope``.  None when ambiguous."""
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name) and scope is not None:
+        hits = [
+            n.value
+            for n in ast.walk(scope)
+            if isinstance(n, ast.Assign)
+            and len(n.targets) == 1
+            and isinstance(n.targets[0], ast.Name)
+            and n.targets[0].id == node.id
+        ]
+        if len(hits) == 1 and isinstance(hits[0], ast.Tuple):
+            return hits[0]
+    return None
+
+
+def string_constants(node: ast.AST) -> list[tuple[str, int]]:
+    """Every string literal under ``node`` with its line number."""
+    return [
+        (n.value, n.lineno)
+        for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# repo facts: the declared logical / mesh axis vocabulary
+# ---------------------------------------------------------------------------
+
+
+# fallback vocabulary when repro/dist/sharding.py is not under the scanned
+# roots (e.g. linting a single test file from elsewhere) — a snapshot of the
+# rule tables, used only as a last resort
+DEFAULT_LOGICAL_AXES = frozenset(
+    {
+        "batch", "model", "seq", "residual_seq", "embed", "heads", "kv_heads",
+        "ffn", "vocab", "expert", "kv_seq", "nodes",
+    }
+)
+DEFAULT_MESH_AXES = frozenset({"data", "model", "pod"})
+
+
+@dataclasses.dataclass
+class RepoFacts:
+    """Axis vocabulary extracted from ``repro/dist/sharding.py``.
+
+    ``logical_axes``: names model code may use in ``constrain``/rule dicts
+    (the keys of ``logical_rules``'s tables).  ``mesh_axes``: physical mesh
+    axis names logical names may bind to (the values, plus every axis named
+    in the module's PartitionSpecs).
+    """
+
+    logical_axes: frozenset[str] = DEFAULT_LOGICAL_AXES
+    mesh_axes: frozenset[str] = DEFAULT_MESH_AXES
+    source: str | None = None  # path the tables were read from
+
+    @classmethod
+    def discover(cls, roots: list[Path]) -> "RepoFacts":
+        for root in roots:
+            base = root if root.is_dir() else root.parent
+            for cand in [base, *base.parents]:
+                hit = cand / "src" / "repro" / "dist" / "sharding.py"
+                if hit.is_file():
+                    return cls.from_sharding_module(hit)
+            if root.is_dir():
+                hits = sorted(root.rglob("repro/dist/sharding.py"))
+                if hits:
+                    return cls.from_sharding_module(hits[0])
+        return cls()
+
+    @classmethod
+    def from_sharding_module(cls, path: Path) -> "RepoFacts":
+        tree = ast.parse(path.read_text(), filename=str(path))
+        logical: set[str] = set()
+        mesh: set[str] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if node.name == "logical_rules":
+                for n in ast.walk(node):
+                    # rules = {"batch": dp, "model": "model", ...}
+                    if isinstance(n, ast.Dict):
+                        for k, v in zip(n.keys, n.values):
+                            if isinstance(k, ast.Constant) and isinstance(
+                                k.value, str
+                            ):
+                                logical.add(k.value)
+                                mesh.update(s for s, _ in string_constants(v))
+                    # rules.update(seq=None, heads="model", ...)
+                    elif (
+                        isinstance(n, ast.Call)
+                        and isinstance(n.func, ast.Attribute)
+                        and n.func.attr == "update"
+                    ):
+                        for kw in n.keywords:
+                            if kw.arg:
+                                logical.add(kw.arg)
+                                mesh.update(
+                                    s for s, _ in string_constants(kw.value)
+                                )
+                    # rules["nodes"] = dp + ("model",)
+                    elif isinstance(n, ast.Assign) and isinstance(
+                        n.targets[0], ast.Subscript
+                    ):
+                        key = n.targets[0].slice
+                        if isinstance(key, ast.Constant) and isinstance(
+                            key.value, str
+                        ):
+                            logical.add(key.value)
+                            mesh.update(s for s, _ in string_constants(n.value))
+                    # dp = ("pod", "data") if multi_pod else ("data",)
+                    elif (
+                        isinstance(n, ast.Assign)
+                        and isinstance(n.targets[0], ast.Name)
+                        and not isinstance(n.value, ast.Dict)
+                    ):
+                        mesh.update(s for s, _ in string_constants(n.value))
+            elif node.name == "kv_seq_axes":
+                # returned tuples only (the docstring is prose, not axes)
+                for n in ast.walk(node):
+                    if isinstance(n, (ast.Return, ast.Assign)) and n.value:
+                        mesh.update(s for s, _ in string_constants(n.value))
+        if not logical or not mesh:
+            return cls(source=str(path))
+        return cls(frozenset(logical), frozenset(mesh), str(path))
+
+
+# ---------------------------------------------------------------------------
+# file context + runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a pass needs about one parsed file (parse once, share)."""
+
+    path: Path
+    rel: str                       # path as reported in findings
+    tree: ast.Module
+    lines: list[str]
+    facts: RepoFacts
+    imports: dict[str, str]
+    _parents: dict | None = None
+
+    @property
+    def parents(self) -> dict:
+        if self._parents is None:
+            self._parents = parent_map(self.tree)
+        return self._parents
+
+    def resolve(self, node: ast.AST) -> str | None:
+        return resolve_call(node, self.imports)
+
+
+def all_passes():
+    from repro.analysis import (
+        rules_determinism,
+        rules_jit,
+        rules_pallas,
+        rules_sharding,
+    )
+
+    return [rules_sharding, rules_pallas, rules_determinism, rules_jit]
+
+
+def rule_catalog() -> dict[str, str]:
+    out: dict[str, str] = {}
+    for p in all_passes():
+        out.update(p.RULES)
+    return out
+
+
+def suppressed_rules(line_text: str) -> set[str] | None:
+    """Rules suppressed on this line: a set of names, the universal set
+    (returned as ``{"*"}``) for a bare ``# repro: ignore``, or None."""
+    m = SUPPRESS_RE.search(line_text)
+    if not m:
+        return None
+    if m.group(1) is None:
+        return {"*"}
+    return {r.strip() for r in m.group(1).split(",") if r.strip()}
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    n_files: int
+    facts: RepoFacts
+    errors: list[Finding]  # unparseable files (reported, non-fatal)
+
+    def to_dict(self) -> dict:
+        return {
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "errors": [f.to_dict() for f in self.errors],
+            "n_files": self.n_files,
+            "rules": rule_catalog(),
+            "facts": {
+                "logical_axes": sorted(self.facts.logical_axes),
+                "mesh_axes": sorted(self.facts.mesh_axes),
+                "source": self.facts.source,
+            },
+        }
+
+
+def iter_py_files(paths: list[Path], include_fixtures: bool = False):
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+            continue
+        if not p.is_dir():
+            continue
+        for f in sorted(p.rglob("*.py")):
+            parts = set(f.parts)
+            if parts & SKIP_DIRS:
+                continue
+            if not include_fixtures and "analysis_fixtures" in parts:
+                continue
+            yield f
+
+
+def analyze_file(
+    path: Path, facts: RepoFacts, rel: str | None = None
+) -> tuple[list[Finding], list[Finding]]:
+    """(active findings, suppressed findings) for one file."""
+    rel = rel or path.as_posix()
+    src = path.read_text()
+    tree = ast.parse(src, filename=rel)
+    lines = src.splitlines()
+    ctx = FileContext(
+        path=path, rel=rel, tree=tree, lines=lines, facts=facts,
+        imports=import_map(tree),
+    )
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    for p in all_passes():
+        for f in p.run(ctx):
+            text = lines[f.line - 1] if 0 < f.line <= len(lines) else ""
+            sup = suppressed_rules(text)
+            if sup is not None and ("*" in sup or f.rule in sup):
+                suppressed.append(f)
+            else:
+                active.append(f)
+    key = lambda f: (f.file, f.line, f.rule)  # noqa: E731
+    return sorted(active, key=key), sorted(suppressed, key=key)
+
+
+def analyze_paths(
+    paths: list[str | Path], include_fixtures: bool = False,
+    facts: RepoFacts | None = None,
+) -> Report:
+    roots = [Path(p) for p in paths]
+    facts = facts or RepoFacts.discover(roots)
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    errors: list[Finding] = []
+    n = 0
+    for f in iter_py_files(roots, include_fixtures):
+        n += 1
+        rel = f.as_posix()
+        try:
+            a, s = analyze_file(f, facts, rel)
+        except SyntaxError as e:
+            errors.append(
+                Finding(rel, e.lineno or 0, "parse-error", str(e.msg))
+            )
+            continue
+        findings.extend(a)
+        suppressed.extend(s)
+    return Report(findings, suppressed, n, facts, errors)

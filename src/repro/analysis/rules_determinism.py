@@ -1,0 +1,150 @@
+"""Simulation-determinism pass.
+
+The serving results (PR-2 "identical argmax", PR-4 SLA curves, every
+latency-bounded throughput comparison) assume bitwise-reproducible
+simulation: common random numbers threaded as seeded ``np.random.Generator``
+objects, virtual time from the event loop, and ordered containers feeding
+ordered results.  One unseeded draw or set-iteration in a hot path silently
+turns "A beats B" into noise.
+
+Scope is the simulated paths only — ``serving/engine.py``,
+``serving/simulator.py``, ``serving/cluster_runtime.py`` and ``core/*``
+(plus the lint fixture corpus); benchmarks and tests may use wall clocks
+and ad-hoc RNG freely.
+
+- ``determinism-global-rng``: ``np.random.<draw>`` module-level RNG calls
+  (seeded constructor entry points like ``default_rng``/``SeedSequence``
+  are fine);
+- ``determinism-stdlib-random``: any call on the stdlib ``random`` module
+  (its global Mersenne state is process-wide and unseedable per-component);
+- ``determinism-wall-clock``: ``time.time``/``monotonic``/``perf_counter``
+  (and ``_ns`` variants) — simulated paths must take time from the event
+  loop's virtual clock;
+- ``determinism-set-order``: iterating a ``set`` (for-loop, comprehension,
+  ``sum``/``join`` reduction) where the result order matters — wrap in
+  ``sorted(...)`` or keep a list/dict.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Finding, dotted_name
+
+RULES = {
+    "determinism-global-rng": (
+        "unseeded module-level numpy RNG in a simulated path — thread a "
+        "seeded np.random.Generator instead"
+    ),
+    "determinism-stdlib-random": (
+        "stdlib random (global Mersenne state) in a simulated path — "
+        "thread a seeded np.random.Generator instead"
+    ),
+    "determinism-wall-clock": (
+        "wall-clock read in a simulated path — use the event loop's "
+        "virtual clock"
+    ),
+    "determinism-set-order": (
+        "iteration over a set feeds an ordered result — sort it or use an "
+        "ordered container"
+    ),
+}
+
+# determinism scope: the simulated hot paths named in the issue, plus the
+# lint fixture corpus (so known-bad fixtures are in scope by construction)
+_SCOPE_MARKERS = (
+    "repro/serving/engine.py",
+    "repro/serving/simulator.py",
+    "repro/serving/cluster_runtime.py",
+    "repro/core/",
+    "analysis_fixtures",
+)
+
+# numpy.random entry points that construct/derive seeded state rather than
+# drawing from the hidden global stream
+_SEEDED_CONSTRUCTORS = {
+    "default_rng", "Generator", "SeedSequence", "PCG64", "PCG64DXSM",
+    "Philox", "SFC64", "MT19937", "BitGenerator", "RandomState",
+}
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns",
+}
+
+
+def _in_scope(rel: str) -> bool:
+    return any(m in rel for m in _SCOPE_MARKERS)
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in ("set", "frozenset")
+    )
+
+
+def _check_call(ctx: FileContext, node: ast.Call):
+    resolved = ctx.resolve(node.func)
+    if resolved is None:
+        return
+    if resolved.startswith("numpy.random."):
+        leaf = resolved.rsplit(".", 1)[1]
+        if leaf not in _SEEDED_CONSTRUCTORS:
+            yield Finding(
+                ctx.rel, node.lineno, "determinism-global-rng",
+                f"np.random.{leaf}() draws from the global stream — use a "
+                "seeded Generator",
+            )
+    elif resolved.startswith("random."):
+        leaf = resolved.rsplit(".", 1)[1]
+        if leaf not in ("Random", "SystemRandom"):
+            yield Finding(
+                ctx.rel, node.lineno, "determinism-stdlib-random",
+                f"random.{leaf}() uses the process-global Mersenne state",
+            )
+    elif resolved in _WALL_CLOCK:
+        yield Finding(
+            ctx.rel, node.lineno, "determinism-wall-clock",
+            f"{resolved}() reads the wall clock inside a simulated path",
+        )
+
+
+def _check_set_iteration(ctx: FileContext, node: ast.AST):
+    if isinstance(node, ast.For) and _is_set_expr(node.iter):
+        yield Finding(
+            ctx.rel, node.iter.lineno, "determinism-set-order",
+            "for-loop iterates a set in an order-sensitive path",
+        )
+    elif isinstance(
+        node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)
+    ):
+        for gen in node.generators:
+            if _is_set_expr(gen.iter):
+                yield Finding(
+                    ctx.rel, gen.iter.lineno, "determinism-set-order",
+                    "comprehension iterates a set into an ordered result",
+                )
+    elif isinstance(node, ast.Call):
+        # sum(set)/"".join(set): order-dependent float accumulation / text
+        dotted = dotted_name(node.func) or ""
+        leaf = dotted.split(".")[-1]
+        if leaf in ("sum", "join") and node.args and _is_set_expr(
+            node.args[0]
+        ):
+            yield Finding(
+                ctx.rel, node.lineno, "determinism-set-order",
+                f"{leaf}() over a set accumulates in hash order",
+            )
+
+
+def run(ctx: FileContext):
+    if not _in_scope(ctx.rel):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            yield from _check_call(ctx, node)
+        yield from _check_set_iteration(ctx, node)

@@ -1,0 +1,173 @@
+"""Jit-purity pass.
+
+Host-side operations on traced values inside ``jax.jit`` / ``shard_map``
+functions either fail at trace time (``float(tracer)``), silently run once
+at trace time (``print``), or force a blocking device sync (``.item()``)
+that wrecks the async dispatch pipeline the serving engine depends on.
+
+Scope detection is static: functions decorated ``@jax.jit`` or
+``@functools.partial(jax.jit, ...)`` (with ``static_argnames`` /
+``static_argnums`` excluded from the traced parameter set), plus functions
+passed as the first argument to ``shard_map``.  Host ``numpy`` calls are
+only flagged when a traced parameter is passed *directly* — ``np.sqrt(hd)``
+on a Python int extracted from a static shape is fine and common in this
+repo's kernels.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Finding, dotted_name
+
+RULES = {
+    "jit-purity-print": (
+        "print inside a jitted/shard_map function runs at trace time only "
+        "— use jax.debug.print"
+    ),
+    "jit-purity-host-sync": (
+        ".item()/.tolist()/float()/int() on a traced value forces a "
+        "blocking host sync inside jit"
+    ),
+    "jit-purity-host-numpy": (
+        "host numpy op applied to a traced value inside jit — use "
+        "jax.numpy"
+    ),
+}
+
+
+def _resolves_to_jit(ctx: FileContext, node: ast.AST) -> bool:
+    resolved = ctx.resolve(node)
+    if resolved == "jax.jit":
+        return True
+    dotted = dotted_name(node)
+    return dotted in ("jax.jit",)
+
+
+def _static_names(fn: ast.FunctionDef, call: ast.Call | None) -> set[str]:
+    """Parameter names excluded from tracing by static_argnames/argnums."""
+    if call is None:
+        return set()
+    out: set[str] = set()
+    params = [
+        a.arg
+        for a in [*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs]
+    ]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(params):
+                        out.add(params[n.value])
+    return out
+
+
+def _jitted_functions(ctx: FileContext):
+    """Yield (FunctionDef, traced-param-name set) for every statically
+    detectable jit/shard_map scope in the file."""
+    by_name = {
+        n.name: n
+        for n in ast.walk(ctx.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+    def params_of(fn):
+        return {
+            a.arg
+            for a in [*fn.args.posonlyargs, *fn.args.args,
+                      *fn.args.kwonlyargs]
+        }
+
+    for fn in by_name.values():
+        for dec in fn.decorator_list:
+            if _resolves_to_jit(ctx, dec):
+                yield fn, params_of(fn)
+            elif isinstance(dec, ast.Call):
+                if _resolves_to_jit(ctx, dec.func):
+                    yield fn, params_of(fn) - _static_names(fn, dec)
+                elif (
+                    (dotted_name(dec.func) or "").endswith("partial")
+                    and dec.args
+                    and _resolves_to_jit(ctx, dec.args[0])
+                ):
+                    yield fn, params_of(fn) - _static_names(fn, dec)
+
+    # functions handed to shard_map: every parameter is traced
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = dotted_name(node.func) or ""
+        if not dotted.endswith("shard_map"):
+            continue
+        target = node.args[0] if node.args else None
+        if (
+            isinstance(target, ast.Call)
+            and (dotted_name(target.func) or "").endswith("partial")
+            and target.args
+        ):
+            target = target.args[0]
+        if isinstance(target, ast.Name) and target.id in by_name:
+            fn = by_name[target.id]
+            yield fn, params_of(fn)
+
+
+def run(ctx: FileContext):
+    seen: set[tuple[int, str]] = set()
+    for fn, traced in _jitted_functions(ctx):
+        if (fn.lineno, fn.name) in seen:
+            continue
+        seen.add((fn.lineno, fn.name))
+        # nested jitted defs are their own scope; don't double-report
+        inner = {
+            n
+            for d in ast.walk(fn)
+            if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and d is not fn
+            for n in ast.walk(d)
+        }
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or node in inner:
+                continue
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                yield Finding(
+                    ctx.rel, node.lineno, "jit-purity-print",
+                    f"print() inside jitted function {fn.name}",
+                )
+            elif isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "item", "tolist"
+            ):
+                yield Finding(
+                    ctx.rel, node.lineno, "jit-purity-host-sync",
+                    f".{node.func.attr}() inside jitted function {fn.name} "
+                    "blocks on the device",
+                )
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+                and node.args[0].id in traced
+            ):
+                yield Finding(
+                    ctx.rel, node.lineno, "jit-purity-host-sync",
+                    f"{node.func.id}() on traced argument "
+                    f"{node.args[0].id} fails/syncs at trace time",
+                )
+            else:
+                resolved = ctx.resolve(node.func)
+                if (
+                    resolved
+                    and resolved.startswith("numpy.")
+                    and any(
+                        isinstance(a, ast.Name) and a.id in traced
+                        for a in node.args
+                    )
+                ):
+                    yield Finding(
+                        ctx.rel, node.lineno, "jit-purity-host-numpy",
+                        f"{resolved} applied to a traced argument of "
+                        f"{fn.name}",
+                    )

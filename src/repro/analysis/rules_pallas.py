@@ -1,0 +1,232 @@
+"""Pallas-kernel discipline pass.
+
+The repo's kernels are validated in ``interpret=True`` mode (this container
+has no TPU), so every ``pl.pallas_call`` site must stay interpret-equivalent:
+
+- the grid rank must match every index map's arity and every index map's
+  returned tuple must match its BlockSpec block-shape rank (a mismatch
+  compiles on TPU into silent wrong indexing or fails only at lowering);
+- index maps must be pure lambdas over their grid arguments — closing over
+  a global or tracer captures a value at trace time and diverges between
+  interpret and compiled runs (the sanctioned capture idiom is a lambda
+  default, ``lambda h, i, j, g=group: ...``, which binds at definition);
+- Python ``if``/``while`` on a Ref value inside a kernel body is a trace
+  error on TPU but may silently "work" in interpret mode — use ``pl.when``
+  / ``jnp.where``;
+- every ``pallas_call`` must expose an ``interpret=`` kwarg path so CI's
+  kernels-interpret lane can reach it.
+
+The checks are intentionally literal: a grid/BlockSpec that can't be
+resolved to a tuple literal (through one simple local assignment) is
+skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+
+from repro.analysis.core import (
+    FileContext,
+    Finding,
+    dotted_name,
+    enclosing_function,
+    literal_tuple,
+)
+
+RULES = {
+    "pallas-grid-blockspec-rank": (
+        "BlockSpec index-map arity / block-shape rank disagrees with the "
+        "pallas_call grid"
+    ),
+    "pallas-index-map-closure": (
+        "BlockSpec index map closes over a non-parameter name (capture it "
+        "as a lambda default instead)"
+    ),
+    "pallas-ref-branch": (
+        "Python if/while branches on a kernel Ref value — use pl.when or "
+        "jnp.where"
+    ),
+    "pallas-no-interpret": (
+        "pallas_call has no interpret=-reachable path for CI's interpret "
+        "lane"
+    ),
+}
+
+_BUILTINS = frozenset(dir(builtins))
+
+
+def _is_pallas_call(ctx: FileContext, node: ast.Call) -> bool:
+    resolved = ctx.resolve(node.func)
+    if resolved in (
+        "jax.experimental.pallas.pallas_call",
+        "jax.experimental.pallas.triton.pallas_call",
+    ):
+        return True
+    dotted = dotted_name(node.func)
+    return dotted is not None and dotted.endswith("pl.pallas_call")
+
+
+def _kwarg(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _block_specs(node: ast.AST | None) -> list[ast.Call]:
+    """BlockSpec constructor calls under an in_specs/out_specs expression
+    (a single BlockSpec, or a list/tuple of them)."""
+    if node is None:
+        return []
+    return [
+        n
+        for n in ast.walk(node)
+        if isinstance(n, ast.Call)
+        and (dotted_name(n.func) or "").split(".")[-1] == "BlockSpec"
+    ]
+
+
+def _lambda_params(fn: ast.Lambda) -> tuple[list[str], int]:
+    """(all parameter names, count of non-default positional params)."""
+    a = fn.args
+    pos = [p.arg for p in [*a.posonlyargs, *a.args]]
+    names = pos + [p.arg for p in a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names, len(pos) - len(a.defaults)
+
+
+def _check_index_map(
+    ctx: FileContext, spec: ast.Call, grid_rank: int | None, scope
+):
+    # BlockSpec(block_shape, index_map) — both positional in this repo
+    shape_node = spec.args[0] if spec.args else _kwarg(spec, "block_shape")
+    fn = spec.args[1] if len(spec.args) > 1 else _kwarg(spec, "index_map")
+    if not isinstance(fn, ast.Lambda):
+        return
+    params, n_positional = _lambda_params(fn)
+
+    if grid_rank is not None and n_positional != grid_rank:
+        yield Finding(
+            ctx.rel, fn.lineno, "pallas-grid-blockspec-rank",
+            f"index map takes {n_positional} grid indices but the grid has "
+            f"rank {grid_rank}",
+        )
+
+    shape_tuple = literal_tuple(shape_node, scope) if shape_node else None
+    if shape_tuple is not None and isinstance(fn.body, ast.Tuple):
+        if len(fn.body.elts) != len(shape_tuple.elts):
+            yield Finding(
+                ctx.rel, fn.lineno, "pallas-grid-blockspec-rank",
+                f"index map returns {len(fn.body.elts)} coordinates for a "
+                f"rank-{len(shape_tuple.elts)} block shape",
+            )
+
+    for n in ast.walk(fn.body):
+        if (
+            isinstance(n, ast.Name)
+            and isinstance(n.ctx, ast.Load)
+            and n.id not in params
+            and n.id not in _BUILTINS
+        ):
+            yield Finding(
+                ctx.rel, n.lineno, "pallas-index-map-closure",
+                f'index map closes over "{n.id}" — bind it as a lambda '
+                f"default ({n.id}={n.id})",
+            )
+
+
+def _kernel_function(
+    ctx: FileContext, call: ast.Call, scope
+) -> ast.FunctionDef | None:
+    """Resolve pallas_call's first argument to its kernel FunctionDef,
+    through the ``kernel = functools.partial(_fn, ...)`` idiom."""
+    if not call.args:
+        return None
+    target = call.args[0]
+    name: str | None = None
+    if isinstance(target, ast.Name):
+        name = target.id
+        # one level of `kernel = functools.partial(_fn, ...)`
+        if scope is not None:
+            for n in ast.walk(scope):
+                if (
+                    isinstance(n, ast.Assign)
+                    and len(n.targets) == 1
+                    and isinstance(n.targets[0], ast.Name)
+                    and n.targets[0].id == name
+                    and isinstance(n.value, ast.Call)
+                    and (dotted_name(n.value.func) or "").endswith("partial")
+                    and n.value.args
+                    and isinstance(n.value.args[0], ast.Name)
+                ):
+                    name = n.value.args[0].id
+                    break
+    elif isinstance(target, ast.Call) and (
+        dotted_name(target.func) or ""
+    ).endswith("partial"):
+        if target.args and isinstance(target.args[0], ast.Name):
+            name = target.args[0].id
+    if name is None:
+        return None
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.FunctionDef) and n.name == name:
+            return n
+    return None
+
+
+def _check_ref_branches(ctx: FileContext, kernel: ast.FunctionDef):
+    refs = {
+        a.arg
+        for a in [*kernel.args.posonlyargs, *kernel.args.args,
+                  *kernel.args.kwonlyargs]
+        if a.arg.endswith(("_ref", "_scr"))
+    }
+    if not refs:
+        return
+    for n in ast.walk(kernel):
+        if isinstance(n, (ast.If, ast.While, ast.IfExp)):
+            touched = sorted(
+                m.id
+                for m in ast.walk(n.test)
+                if isinstance(m, ast.Name) and m.id in refs
+            )
+            if touched:
+                yield Finding(
+                    ctx.rel, n.test.lineno, "pallas-ref-branch",
+                    f"Python branch on Ref value(s) {', '.join(touched)} — "
+                    "this traces on data, use pl.when/jnp.where",
+                )
+
+
+def run(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(ctx, node)):
+            continue
+        scope = enclosing_function(node, ctx.parents)
+
+        interp = _kwarg(node, "interpret")
+        if interp is None or (
+            isinstance(interp, ast.Constant) and interp.value is False
+        ):
+            yield Finding(
+                ctx.rel, node.lineno, "pallas-no-interpret",
+                "pallas_call never enables interpret mode — plumb an "
+                "interpret= kwarg through to it",
+            )
+
+        grid_node = _kwarg(node, "grid")
+        grid_tuple = literal_tuple(grid_node, scope) if grid_node else None
+        grid_rank = len(grid_tuple.elts) if grid_tuple is not None else None
+
+        for spec in [
+            *_block_specs(_kwarg(node, "in_specs")),
+            *_block_specs(_kwarg(node, "out_specs")),
+        ]:
+            yield from _check_index_map(ctx, spec, grid_rank, scope)
+
+        kernel = _kernel_function(ctx, node, scope)
+        if kernel is not None:
+            yield from _check_ref_branches(ctx, kernel)

@@ -1,0 +1,217 @@
+"""Sharding-consistency pass.
+
+A typo'd axis name in a ``constrain`` annotation, an ``axis_rules`` dict or
+a ``PartitionSpec`` does not error — ``logical.resolve`` maps unknown names
+to None and GSPMD happily replicates, so a multi-GB table silently lands
+whole on every chip.  This pass checks every literal axis name against the
+vocabulary declared in ``repro/dist/sharding.py``'s rule tables
+(:class:`repro.analysis.core.RepoFacts`):
+
+- logical names (``constrain`` axes, ``axis_rules`` dict keys,
+  ``rules[...] = ...`` writes) must be declared logical axes;
+- mesh names (``PartitionSpec`` entries, ``axis_rules`` dict values,
+  string axis arguments of collectives like ``psum``/``all_gather``/
+  ``axis_index``) must be declared mesh axes;
+- a spec-tree fallback that replicates on structural divergence without
+  warning or raising (the historical ``opt_spec_tree`` behaviour) is a
+  finding — silent replication is exactly the failure mode above.
+
+Only literal strings are checked; names computed at run time (e.g.
+``tuple(mesh.axis_names)``) are out of static reach and pass through.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    FileContext,
+    Finding,
+    dotted_name,
+    string_constants,
+)
+
+RULES = {
+    "sharding-unknown-logical-axis": (
+        "logical axis name not declared in repro/dist/sharding.py's rule "
+        "tables (it would silently resolve to replicated)"
+    ),
+    "sharding-unknown-mesh-axis": (
+        "mesh axis name not used by any declared mesh "
+        "(PartitionSpec/collective would fail or silently replicate)"
+    ),
+    "sharding-silent-fallback": (
+        "spec-tree structural-divergence fallback replicates without "
+        "warning or raising"
+    ),
+}
+
+# collectives whose string arguments name mesh axes
+_COLLECTIVES = {
+    "psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
+    "axis_index", "axis_size", "ppermute", "psum_scatter",
+}
+
+
+def _is_logical_api(ctx: FileContext, func: ast.AST, name: str) -> bool:
+    """Does ``func`` refer to repro.dist.logical.<name>?"""
+    resolved = ctx.resolve(func)
+    if resolved is not None:
+        return resolved == f"repro.dist.logical.{name}"
+    # fallback: `logical.<name>` via a relative/unresolved import
+    dotted = dotted_name(func)
+    return dotted is not None and dotted.endswith(f"logical.{name}")
+
+
+def _check_axis_strings(
+    ctx: FileContext, node: ast.AST, vocab: frozenset, rule: str, what: str
+):
+    for s, line in string_constants(node):
+        if s not in vocab:
+            yield Finding(
+                ctx.rel, line, rule,
+                f'unknown {what} "{s}" (declared: '
+                f"{', '.join(sorted(vocab))})",
+            )
+
+
+def _check_constrain(ctx: FileContext, call: ast.Call):
+    if len(call.args) < 2:
+        return
+    yield from _check_axis_strings(
+        ctx, call.args[1], ctx.facts.logical_axes,
+        "sharding-unknown-logical-axis", "logical axis",
+    )
+
+
+def _check_axis_rules(ctx: FileContext, call: ast.Call):
+    if len(call.args) < 2 or not isinstance(call.args[1], ast.Dict):
+        return
+    rules_dict = call.args[1]
+    for k, v in zip(rules_dict.keys, rules_dict.values):
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            if k.value not in ctx.facts.logical_axes:
+                yield Finding(
+                    ctx.rel, k.lineno, "sharding-unknown-logical-axis",
+                    f'axis_rules key "{k.value}" is not a declared logical '
+                    "axis",
+                )
+        yield from _check_axis_strings(
+            ctx, v, ctx.facts.mesh_axes,
+            "sharding-unknown-mesh-axis", "mesh axis",
+        )
+
+
+def _check_rules_write(ctx: FileContext, node: ast.Assign):
+    """``rules["kv_seq"] = ...`` — the launch-layer idiom for extending a
+    logical_rules dict; the key must be a declared logical axis."""
+    t = node.targets[0]
+    if not (
+        isinstance(t, ast.Subscript)
+        and isinstance(t.value, ast.Name)
+        and t.value.id == "rules"
+        and isinstance(t.slice, ast.Constant)
+        and isinstance(t.slice.value, str)
+    ):
+        return
+    if t.slice.value not in ctx.facts.logical_axes:
+        yield Finding(
+            ctx.rel, node.lineno, "sharding-unknown-logical-axis",
+            f'rules["{t.slice.value}"] writes an undeclared logical axis',
+        )
+
+
+def _is_partition_spec(ctx: FileContext, func: ast.AST) -> bool:
+    resolved = ctx.resolve(func)
+    return resolved in (
+        "jax.sharding.PartitionSpec",
+        "jax.experimental.pjit.PartitionSpec",
+    )
+
+
+def _check_silent_fallback(ctx: FileContext, node: ast.If):
+    """``if len(a) != len(b): <build replicated specs>`` with no warn/raise
+    in the branch — the opt_spec_tree bug class."""
+    test = node.test
+    if not (
+        isinstance(test, ast.Compare)
+        and len(test.ops) == 1
+        and isinstance(test.ops[0], ast.NotEq)
+    ):
+        return
+    sides = [test.left, *test.comparators]
+    if not all(
+        isinstance(s, ast.Call)
+        and isinstance(s.func, ast.Name)
+        and s.func.id == "len"
+        for s in sides
+    ):
+        return
+    body_calls = [
+        n for stmt in node.body for n in ast.walk(stmt)
+        if isinstance(n, ast.Call)
+    ]
+    replicates = any(
+        "replicated" in (dotted_name(c.func) or "").lower()
+        for c in body_calls
+    )
+    if not replicates:
+        return
+    warns = any(
+        (dotted_name(c.func) or "").split(".")[-1] in ("warn", "warning")
+        for c in body_calls
+    )
+    raises = any(
+        isinstance(n, ast.Raise)
+        for stmt in node.body
+        for n in ast.walk(stmt)
+    )
+    if not warns and not raises:
+        yield Finding(
+            ctx.rel, node.lineno, "sharding-silent-fallback",
+            "structure-mismatch branch falls back to replicated specs "
+            "without a warning or raise — add a structured warning and a "
+            "strict= escape hatch",
+        )
+
+
+def run(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            if _is_logical_api(ctx, node.func, "constrain"):
+                yield from _check_constrain(ctx, node)
+            elif _is_logical_api(ctx, node.func, "axis_rules"):
+                yield from _check_axis_rules(ctx, node)
+            elif _is_logical_api(ctx, node.func, "bound_axes"):
+                if node.args:
+                    yield from _check_axis_strings(
+                        ctx, node.args[0], ctx.facts.logical_axes,
+                        "sharding-unknown-logical-axis", "logical axis",
+                    )
+            elif _is_partition_spec(ctx, node.func):
+                yield from _check_axis_strings(
+                    ctx, node, ctx.facts.mesh_axes,
+                    "sharding-unknown-mesh-axis", "mesh axis",
+                )
+            else:
+                dotted = dotted_name(node.func) or ""
+                leaf = dotted.split(".")[-1]
+                if leaf in _COLLECTIVES:
+                    # axis_index/axis_size take the axis name first; the
+                    # rest take (value, axis_name, ...)
+                    positional = (
+                        node.args
+                        if leaf in ("axis_index", "axis_size")
+                        else node.args[1:]
+                    )
+                    for arg in [*positional, *(
+                        kw.value for kw in node.keywords
+                        if kw.arg in ("axis_name", "axes")
+                    )]:
+                        yield from _check_axis_strings(
+                            ctx, arg, ctx.facts.mesh_axes,
+                            "sharding-unknown-mesh-axis", "mesh axis",
+                        )
+        elif isinstance(node, ast.Assign):
+            yield from _check_rules_write(ctx, node)
+        elif isinstance(node, ast.If):
+            yield from _check_silent_fallback(ctx, node)

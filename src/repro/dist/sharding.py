@@ -19,10 +19,24 @@ on both mesh shapes; data/pod axes shard activations, never weights.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.common.types import ArchKind
+
+
+class ShardingFallbackWarning(UserWarning):
+    """An optimizer sub-tree diverged from the parameter structure and its
+    accumulators were conservatively replicated.
+
+    Replication is correct but silently forfeits memory scaling — a
+    replicated Adam state for a model-sharded multi-GB embedding table puts
+    the whole accumulator on every chip.  The warning names the diverging
+    sub-tree and leaf paths so the spec logic can be extended; pass
+    ``strict=True`` to turn it into an error.
+    """
 
 
 def logical_rules(kind: ArchKind, multi_pod: bool = False) -> dict:
@@ -138,21 +152,36 @@ def param_spec_tree(kind: ArchKind, params):
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
 
 
-def opt_spec_tree(kind: ArchKind, opt_state, param_specs):
+def opt_spec_tree(kind: ArchKind, opt_state, param_specs, strict: bool = False):
     """PartitionSpec pytree for an optimizer state.
 
     Optimizer accumulators mirror the parameter tree ("m"/"v"/"mu"/"acc"
     sub-trees) and inherit each parameter's spec; row-wise accumulators
     ([rows, 1] for a [rows, dim] table) keep the row sharding because the
     spec is positional.  Scalar counters ("step") replicate.
+
+    A sub-tree whose structure diverges from the parameter tree falls back
+    to replicated specs with a :class:`ShardingFallbackWarning` naming the
+    diverging paths; ``strict=True`` raises ``ValueError`` instead (use in
+    tests and launch validation, where a silent memory-scaling regression
+    is worse than a crash).
     """
     spec_leaves = jax.tree_util.tree_leaves(
         param_specs, is_leaf=lambda x: isinstance(x, P)
     )
 
-    def mirrored(sub):
-        leaves, treedef = jax.tree_util.tree_flatten(sub)
+    def mirrored(name, sub):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(sub)
+        leaves = [l for _, l in flat]
         if len(leaves) != len(spec_leaves):
+            msg = (
+                f'optimizer sub-tree "{name}" has {len(leaves)} leaves but '
+                f"params have {len(spec_leaves)}; replicating "
+                f"{[jax.tree_util.keystr(p) for p, _ in flat]}"
+            )
+            if strict:
+                raise ValueError(f"opt_spec_tree: {msg}")
+            warnings.warn(msg, ShardingFallbackWarning, stacklevel=3)
             # structure diverged from params: replicate conservatively
             fitted = [_replicated(len(l.shape)) for l in leaves]
         else:
@@ -170,5 +199,5 @@ def opt_spec_tree(kind: ArchKind, opt_state, param_specs):
         elif len(sub_leaves) == 1 and not len(sub_leaves[0].shape):
             out[name] = P()                      # scalar step counter
         else:
-            out[name] = mirrored(sub)
+            out[name] = mirrored(name, sub)
     return out

@@ -1,0 +1,36 @@
+"""Known-bad corpus for the determinism pass (parsed, never run).
+
+The fixture path contains ``analysis_fixtures`` which is inside the pass's
+simulated-path scope by construction.
+"""
+import random
+import time
+
+import numpy as np
+
+
+def unseeded_draws(n):
+    a = np.random.rand(n)  # expect: determinism-global-rng
+    b = np.random.randint(0, 10, size=n)  # expect: determinism-global-rng
+    np.random.seed(0)  # expect: determinism-global-rng
+    return a, b
+
+
+def stdlib_random(items):
+    random.shuffle(items)  # expect: determinism-stdlib-random
+    return items, random.random()  # expect: determinism-stdlib-random
+
+
+def wall_clock_latency():
+    t0 = time.time()  # expect: determinism-wall-clock
+    t1 = time.perf_counter()  # expect: determinism-wall-clock
+    return t1 - t0
+
+
+def set_order_leaks(queries):
+    order = []
+    for q in {"a", "b", "c"}:  # expect: determinism-set-order
+        order.append(q)
+    ids = [hash(q) for q in set(queries)]  # expect: determinism-set-order
+    total = sum({0.1, 0.2, 0.3})  # expect: determinism-set-order
+    return order, ids, total

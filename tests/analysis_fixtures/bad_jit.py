@@ -1,0 +1,33 @@
+"""Known-bad corpus for the jit-purity pass (parsed, never run)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+
+@jax.jit
+def noisy_step(state, batch):
+    print("step", batch)  # expect: jit-purity-print
+    loss = jnp.mean((state - batch) ** 2)
+    scale = loss.item()  # expect: jit-purity-host-sync
+    return state - scale * batch
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def host_math(params, grads, lr):
+    norm = np.linalg.norm(grads)  # expect: jit-purity-host-numpy
+    if float(params) > 0:  # expect: jit-purity-host-sync
+        return params - lr * grads / norm
+    return params
+
+
+def _shard_body(x):
+    print("shard", x)  # expect: jit-purity-print
+    return jax.lax.psum(x, "model"), x.tolist()  # expect: jit-purity-host-sync
+
+
+def run_sharded(mesh, x, specs):
+    return shard_map(_shard_body, mesh=mesh, in_specs=specs,
+                     out_specs=specs)(x)

@@ -1,0 +1,54 @@
+"""Known-bad corpus for the pallas-kernel pass (parsed, never run)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _branchy_kernel(x_ref, o_ref):
+    if x_ref[0, 0] > 0:  # expect: pallas-ref-branch
+        o_ref[...] = x_ref[...]
+    else:
+        o_ref[...] = -x_ref[...]
+
+
+def arity_mismatch(x):
+    return pl.pallas_call(  # expect: pallas-no-interpret
+        _branchy_kernel,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (i, 0)),  # expect: pallas-grid-blockspec-rank
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j, 0)),  # expect: pallas-grid-blockspec-rank
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _ok_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def closure_capture(x, interpret=False):
+    offset = x.shape[0] // 2
+    return pl.pallas_call(
+        _ok_kernel,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (i, offset)),  # expect: pallas-index-map-closure
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i + TILE, 0)),  # expect: pallas-index-map-closure
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def interpret_hardcoded_off(x):
+    return pl.pallas_call(  # expect: pallas-no-interpret
+        _ok_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=False,
+    )(x)

@@ -1,0 +1,51 @@
+"""Known-bad corpus for the sharding-consistency pass.
+
+Never imported or executed — parsed by tests/test_analysis.py, which
+asserts each line carrying an expect-marker comment is flagged with
+exactly the named rule.
+"""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import logical
+
+
+def constrain_typos(x, mesh):
+    x = logical.constrain(x, ("btch", "model"))  # expect: sharding-unknown-logical-axis
+    x = logical.constrain(x, ("batch", "residual_sq"))  # expect: sharding-unknown-logical-axis
+    return x
+
+
+def spec_typos(mesh):
+    spec = P("modle", None)  # expect: sharding-unknown-mesh-axis
+    other = P(None, "mdl")  # expect: sharding-unknown-mesh-axis
+    return spec, other
+
+
+def rule_table_typos(mesh, fn, x):
+    with logical.axis_rules(mesh, {
+        "batch": "data",
+        "typo_axis": "model",  # expect: sharding-unknown-logical-axis
+        "heads": "modell",  # expect: sharding-unknown-mesh-axis
+    }):
+        rules = {"batch": ("pod", "data")}
+        rules["kv_sq"] = ("model",)  # expect: sharding-unknown-logical-axis
+        return fn(x), rules
+
+
+def collective_typos(x):
+    y = jax.lax.psum(x, "modle")  # expect: sharding-unknown-mesh-axis
+    i = jax.lax.axis_index("pods")  # expect: sharding-unknown-mesh-axis
+    return y, i
+
+
+def _replicated(ndim):
+    return P(*([None] * ndim))
+
+
+def silent_fallback_spec_tree(leaves, spec_leaves, treedef):
+    if len(leaves) != len(spec_leaves):  # expect: sharding-silent-fallback
+        fitted = [_replicated(len(l.shape)) for l in leaves]
+    else:
+        fitted = spec_leaves
+    return jax.tree_util.tree_unflatten(treedef, fitted)

@@ -1,0 +1,38 @@
+"""Clean counterpart for the jit-purity pass: zero findings expected."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+
+@jax.jit
+def pure_step(state, batch):
+    loss = jnp.mean((state - batch) ** 2)
+    jax.debug.print("loss {l}", l=loss)     # traced-safe print
+    return state - 0.1 * batch, loss
+
+
+@functools.partial(jax.jit, static_argnames=("hd", "causal"))
+def static_host_math(q, k, hd, causal):
+    # np on a static python int is host math at trace time: fine
+    scale = 1.0 / np.sqrt(hd)
+    s = (q @ k.T) * scale
+    if causal:                               # branch on a static arg: fine
+        s = jnp.tril(s)
+    return s
+
+
+def _shard_body(x):
+    return jax.lax.psum(x, "model")
+
+
+def run_sharded(mesh, x, specs):
+    return shard_map(_shard_body, mesh=mesh, in_specs=specs,
+                     out_specs=specs)(x)
+
+
+def host_side_logging(metrics):
+    # not a jitted scope: host syncs are allowed
+    print("loss:", float(metrics["loss"]), metrics["acc"].item())

@@ -1,0 +1,49 @@
+"""Clean counterpart for the pallas pass: zero findings expected.
+
+Mirrors the repo's real kernel idioms: lambda-default capture, partial-
+wrapped kernels, interpret= plumbed through.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref, *, gain):
+    o_ref[...] = x_ref[...] * gain
+
+
+def scaled_copy(x, *, gain=2.0, interpret=False):
+    group = 4
+    grid = (x.shape[0] // 8, x.shape[1] // 8)
+    kernel = functools.partial(_scale_kernel, gain=gain)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+            # sanctioned capture: bound as a lambda default at definition
+            pl.BlockSpec((8, 8), lambda i, j, g=group: (i // g, j)),
+        ],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, x)
+
+
+def _masked_kernel(x_ref, o_ref):
+    # data-dependent select stays inside jnp.where / pl.when, not Python if
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x > 0, x, 0.0)
+
+
+def relu_tiled(x, interpret=False):
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(x.shape[0] // 8,),
+        in_specs=[pl.BlockSpec((8, x.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, x.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,47 @@
+"""Clean counterpart for the sharding pass: zero findings expected."""
+import warnings
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import logical
+
+
+def constrain_ok(x, mesh):
+    x = logical.constrain(x, ("batch", "model"))
+    return logical.constrain(x, ("kv_seq", None))
+
+
+def specs_ok():
+    return P("model", None), P(None, ("pod", "data"))
+
+
+def rule_table_ok(mesh, fn, x):
+    with logical.axis_rules(mesh, {"batch": ("pod", "data"),
+                                   "heads": "model"}):
+        rules = {"batch": ("data",)}
+        rules["kv_seq"] = ("data", "model")
+        return fn(x), rules
+
+
+def collectives_ok(x):
+    return jax.lax.psum(x, "model"), jax.lax.axis_index("pod")
+
+
+def runtime_axes_pass_through(x, mesh):
+    # computed axis names are out of static reach — never flagged
+    return jax.lax.psum(x, tuple(mesh.axis_names))
+
+
+def _replicated(ndim):
+    return P(*([None] * ndim))
+
+
+def guarded_fallback(leaves, spec_leaves, treedef):
+    # warning makes the divergence visible: not a silent fallback
+    if len(leaves) != len(spec_leaves):
+        warnings.warn("optimizer tree diverged from params")
+        fitted = [_replicated(len(l.shape)) for l in leaves]
+    else:
+        fitted = spec_leaves
+    return jax.tree_util.tree_unflatten(treedef, fitted)

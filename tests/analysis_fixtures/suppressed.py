@@ -1,0 +1,35 @@
+"""Suppression-handling corpus: every finding here carries a repro-ignore
+comment and must land in the suppressed list, not the report.
+
+An expect-suppressed marker names what each line suppresses (asserted by
+tests/test_analysis.py).
+"""
+import random
+import time
+
+import numpy as np
+
+
+def benchmark_jitter(n):
+    # justified: fixture models an *intentionally* noisy arrival process
+    a = np.random.rand(n)  # repro: ignore[determinism-global-rng]  # expect-suppressed: determinism-global-rng
+    return a
+
+
+def wall_clock_probe():
+    return time.time()  # repro: ignore[determinism-wall-clock]  # expect-suppressed: determinism-wall-clock
+
+
+def bare_ignore_suppresses_all(items):
+    random.shuffle(items)  # repro: ignore  # expect-suppressed: determinism-stdlib-random
+    return items
+
+
+def multi_rule_line(n):
+    t = time.time(); x = np.random.rand(n)  # repro: ignore[determinism-wall-clock, determinism-global-rng]  # expect-suppressed: determinism-wall-clock, determinism-global-rng
+    return t, x
+
+
+def wrong_rule_does_not_suppress(n):
+    # suppressing an unrelated rule leaves the finding active
+    return np.random.rand(n)  # repro: ignore[determinism-wall-clock]  # expect: determinism-global-rng

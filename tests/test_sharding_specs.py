@@ -1,0 +1,101 @@
+"""Spec-tree construction invariants (host-only, no device mesh needed).
+
+Pins the ``opt_spec_tree`` structural-divergence contract: mirrored
+optimizer sub-trees inherit parameter specs exactly; a diverged sub-tree
+replicates with a :class:`ShardingFallbackWarning` naming the diverging
+paths (the silent fallback was a ROADMAP carried gap — a replicated Adam
+state for a model-sharded table costs full-table memory on every chip),
+and ``strict=True`` raises instead.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.common.types import ArchKind
+from repro.dist.sharding import (
+    ShardingFallbackWarning,
+    opt_spec_tree,
+    param_spec_tree,
+)
+
+
+def _params():
+    return {
+        "table": jnp.zeros((16, 8)),
+        "mlp": {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))},
+    }
+
+
+def _specs(params):
+    return param_spec_tree(ArchKind.RECSYS, params)
+
+
+def test_mirrored_sub_tree_inherits_param_specs():
+    params = _params()
+    specs = _specs(params)
+    opt = {"m": params, "v": params, "step": jnp.zeros(())}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ShardingFallbackWarning)
+        out = opt_spec_tree(ArchKind.RECSYS, opt, specs)
+    assert out["m"]["table"] == P("model", None)
+    assert out["v"]["table"] == P("model", None)
+    assert out["m"]["mlp"]["w"] == P(None, None)
+    assert out["step"] == P()
+
+
+def test_row_accumulator_rank_mismatch_replicates_leaf_only():
+    # a [rows] accumulator against a rank-2 spec replicates that leaf but
+    # keeps the others sharded (positional-spec contract)
+    params = _params()
+    specs = _specs(params)
+    opt = {
+        "acc": {
+            "table": jnp.zeros((16,)),
+            "mlp": {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))},
+        }
+    }
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ShardingFallbackWarning)
+        out = opt_spec_tree(ArchKind.RECSYS, opt, specs)
+    assert out["acc"]["table"] == P(None)
+    assert out["acc"]["mlp"]["w"] == P(None, None)
+
+
+def test_diverged_sub_tree_warns_with_paths():
+    params = _params()
+    specs = _specs(params)
+    diverged = dict(params, extra=jnp.zeros((2, 2)))
+    opt = {"m": diverged}
+    with pytest.warns(ShardingFallbackWarning) as rec:
+        out = opt_spec_tree(ArchKind.RECSYS, opt, specs)
+    msg = str(rec.list[0].message)
+    assert '"m"' in msg
+    assert "'extra'" in msg           # the diverging subtree path is named
+    assert "4 leaves" in msg and "3" in msg
+    # conservative fallback: everything in the diverged sub-tree replicated
+    assert all(
+        s == P(*([None] * 2)) or s == P(None)
+        for s in jax.tree_util.tree_leaves(
+            out["m"], is_leaf=lambda x: isinstance(x, P)
+        )
+    )
+
+
+def test_diverged_sub_tree_strict_raises():
+    params = _params()
+    specs = _specs(params)
+    opt = {"m": dict(params, extra=jnp.zeros((2, 2)))}
+    with pytest.raises(ValueError, match='sub-tree "m"'):
+        opt_spec_tree(ArchKind.RECSYS, opt, specs, strict=True)
+
+
+def test_matching_tree_never_warns_strict():
+    params = _params()
+    specs = _specs(params)
+    opt = {"m": params, "v": params, "step": jnp.zeros(()), "none": {}}
+    out = opt_spec_tree(ArchKind.RECSYS, opt, specs, strict=True)
+    assert out["none"] == {}
+    assert out["m"]["table"] == P("model", None)

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Static-analysis baseline gate (CI ``static-analysis`` job).
+
+Diffs a fresh ``python -m repro.analysis --json`` report against the
+checked-in baseline (``tools/analysis_baseline.json``) so a PR that
+introduces a *new* finding fails even when the baseline is non-empty —
+a grandfathered finding must never camouflage a fresh one.
+
+Findings are fingerprinted as ``(file, rule, message)`` — line numbers are
+deliberately excluded so unrelated edits shifting a grandfathered finding
+up or down don't churn the baseline.  Semantics:
+
+- a report finding whose fingerprint is not in the baseline: **new** ->
+  exit 1 (fix it or suppress it with a justified ``# repro: ignore[rule]``);
+- a baseline entry with no matching report finding: **stale** -> exit 1
+  (the debt was paid; shrink the baseline with ``--update`` so it can't
+  regress silently).
+
+``--update`` rewrites the baseline from the current report.  The baseline
+starts — and should stay — empty; it exists so an unavoidable future
+finding (e.g. a rule tightened ahead of a planned refactor) can be landed
+without turning the gate off.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def fingerprint(finding: dict) -> tuple:
+    return (finding["file"], finding["rule"], finding["message"])
+
+
+def load_baseline(path: pathlib.Path) -> list[dict]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return data["findings"] if isinstance(data, dict) else data
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--report", required=True,
+        help="JSON report from python -m repro.analysis --json",
+    )
+    parser.add_argument(
+        "--baseline", default="tools/analysis_baseline.json",
+        help="checked-in baseline of grandfathered findings",
+    )
+    parser.add_argument(
+        "--update", action="store_true",
+        help="rewrite the baseline from the current report and exit 0",
+    )
+    args = parser.parse_args(argv)
+
+    report_path = pathlib.Path(args.report)
+    baseline_path = pathlib.Path(args.baseline)
+    report = json.loads(report_path.read_text())
+    findings = report.get("findings", []) + report.get("errors", [])
+
+    if args.update:
+        baseline_path.write_text(
+            json.dumps({"findings": findings}, indent=2, sort_keys=True)
+            + "\n"
+        )
+        print(f"baseline updated: {len(findings)} finding(s)")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    base_fps = {fingerprint(f) for f in baseline}
+    seen_fps = {fingerprint(f) for f in findings}
+
+    new = [f for f in findings if fingerprint(f) not in base_fps]
+    stale = [f for f in baseline if fingerprint(f) not in seen_fps]
+
+    for f in new:
+        print(
+            f"NEW: {f['file']}:{f.get('line', '?')}: {f['rule']}: "
+            f"{f['message']}"
+        )
+    for f in stale:
+        print(
+            f"STALE baseline entry (fixed — run --update): "
+            f"{f['file']}: {f['rule']}"
+        )
+
+    n_grandfathered = len(findings) - len(new)
+    print(
+        f"check_analysis: {len(new)} new, {n_grandfathered} grandfathered, "
+        f"{len(stale)} stale (baseline: {len(base_fps)})"
+    )
+    return 1 if new or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
