@@ -27,12 +27,19 @@ import pathlib
 
 import numpy as np
 
+import time
+
 from benchmarks.common import emit, timer
 from repro.configs.paper_models import PAPER_MODELS, paper_profile
 from repro.core.cluster import EfficiencyTable, TransitionConfig, provision_day
 from repro.core.devices import SERVER_TYPES
 from repro.core.efficiency import build_table
-from repro.serving.cluster_runtime import failure_schedule, simulate_cluster_day
+from repro.serving import engine, event_core
+from repro.serving.cluster_runtime import (
+    RuntimeConfig,
+    failure_schedule,
+    simulate_cluster_day,
+)
 from repro.serving.diurnal import diurnal_trace, load_increment_rate
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -49,6 +56,97 @@ SMOKE_WORKLOADS = ("dlrm-rmc1", "dlrm-rmc3")
 SMOKE_SERVERS = ("T2", "T3", "T7")
 SMOKE_AVAIL = {"T2": 70, "T3": 15, "T7": 5}
 SMOKE_STEPS = 24
+
+
+def bench_event_kernel(n_jobs: int = 100_000, seed: int = 0) -> dict:
+    """Event-core kernels vs the sequential scalar sweep at n = 1e5 jobs.
+
+    Two records, each bitwise-checked against ``engine._sweep`` before
+    timing counts (a fast wrong kernel must never produce a bench row):
+
+    - ``saturated``: one k-server stream under sustained overload with
+      near-constant service times — the regime of every overloaded
+      bisection probe, where the blocked kernel's round-robin
+      speculation replaces the heap sweep with two ``np.add.accumulate``
+      passes.  This is the >= 5x headline the CI gate pins.
+    - ``fleet``: 512 independent slot streams (k-homogeneous groups,
+      k in {2,4,8,16} — one pool config's slots share k) through one
+      ``fleet_fifo_finish`` call vs one sweep per stream.  End-to-end,
+      including the per-call padding/packing and host<->XLA copies the
+      runtime also pays; the jit compile (first call) is excluded —
+      steady state is what every interval after the first costs."""
+    rng = np.random.default_rng(seed)
+    sweep = engine._sweep
+
+    # -- saturated blocked kernel -------------------------------------
+    k = 8
+    r_sat = rng.exponential(1.0, n_jobs).cumsum()
+    d_sat = np.full(n_jobs, 1.5 * k)        # util 1.5: sustained overload
+    blocked = event_core.blocked_fifo_finish
+    assert np.array_equal(blocked(r_sat, d_sat, k), sweep(r_sat, d_sat, k))
+    sat_kernel_s, sat_sweep_s = _timed_pair(
+        lambda: blocked(r_sat, d_sat, k), lambda: sweep(r_sat, d_sat, k))
+    sat = {
+        "n_jobs": int(n_jobs),
+        "k": k,
+        "kernel_s": float(sat_kernel_s),
+        "sweep_s": float(sat_sweep_s),
+        "speedup": float(sat_sweep_s / sat_kernel_s),
+    }
+    emit("event_core_saturated", sat_kernel_s * 1e6,
+         f"speedup={sat['speedup']:.1f}x;jobs={n_jobs};k={k};"
+         f"ns_per_job={sat_kernel_s / n_jobs * 1e9:.0f}")
+
+    # -- fleet solver --------------------------------------------------
+    ks = [2, 4, 8, 16]
+    n_streams = 512
+    per = 2 * n_jobs // n_streams
+    streams = []
+    for i in range(n_streams):
+        kk = ks[i % len(ks)]
+        n = int(per * rng.uniform(0.8, 1.2))
+        r = rng.exponential(1.0, n).cumsum() * (1.0 / (1.1 * kk))
+        d = rng.choice(rng.uniform(0.5, 1.5, 6), n)
+        streams.append((r, d, kk, rng.uniform(0.0, 2.0, kk)))
+    jobs = sum(len(s[0]) for s in streams)
+    fleet = event_core.fleet_fifo_finish
+    for (r, d, kk, f0), (e, st) in zip(streams, fleet(streams)):  # + warm
+        ref_e, ref_s = sweep(r, d, kk, free0=f0, return_state=True)
+        assert np.array_equal(e, ref_e) and np.array_equal(st, ref_s)
+    fl_kernel_s, fl_sweep_s = _timed_pair(
+        lambda: fleet(streams),
+        lambda: [sweep(r, d, kk, free0=f0, return_state=True)
+                 for r, d, kk, f0 in streams])
+    fl = {
+        "n_streams": n_streams,
+        "n_jobs": int(jobs),
+        "ks": ks,
+        "kernel_s": float(fl_kernel_s),
+        "sweep_s": float(fl_sweep_s),
+        "speedup": float(fl_sweep_s / fl_kernel_s),
+        "jax": bool(event_core.stats["fleet_jax"] > 0),
+    }
+    emit("event_core_fleet", fl_kernel_s * 1e6,
+         f"speedup={fl['speedup']:.1f}x;jobs={jobs};"
+         f"streams={n_streams};jax={fl['jax']};"
+         f"ns_per_job={fl_kernel_s / jobs * 1e9:.0f}")
+    return {"saturated": sat, "fleet": fl}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _timed_pair(fn_a, fn_b, reps: int = 5) -> tuple[float, float]:
+    """Best-of-``reps`` for two contenders, interleaved A/B so transient
+    machine load hits both sides alike and the *ratio* stays stable."""
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        best_a = min(best_a, _timed(fn_a))
+        best_b = min(best_b, _timed(fn_b))
+    return best_a, best_b
 
 
 def _scaled_loads(table: EfficiencyTable, frac: float, seeds,
@@ -120,6 +218,7 @@ def run(smoke: bool = False, out: str | None = None):
     }
     runtime = {}
     for pol in ("nh", "greedy", "hercules"):
+        engine.stats_reset()
         with timer() as t:
             runtime[pol] = simulate_cluster_day(
                 table, records, profiles, traces, policy=pol,
@@ -145,13 +244,17 @@ def run(smoke: bool = False, out: str | None = None):
         worst = min(w["sla_attainment"] for w in r["workloads"].values())
         worst_frac = min(w["interval_sla_met_frac"]
                          for w in r["workloads"].values())
+        # per-bench engine path mix (which FIFO solver served the day)
+        mix = "/".join(f"{k}:{v}" for k, v in engine.stats.items() if v)
+        bench["policies"][pol]["engine_path_mix"] = {
+            k: v for k, v in engine.stats.items() if v}
         emit(f"runtime_{pol}", t.us,
              f"peak_power={r['peak_power_w']/1e3:.1f}kW;"
              f"all_meet_sla={r['all_meet_sla']};"
              f"min_attainment={worst:.4f};"
              f"min_interval_sla_frac={worst_frac:.4f};"
              f"resolves={r['resolves']};holds={r['holds']};"
-             f"churn={r['total_churn']}")
+             f"churn={r['total_churn']};mix={mix}")
     gh, hh = runtime["greedy"], runtime["hercules"]
     saving = 1 - hh["peak_power_w"] / gh["peak_power_w"]
     all_intervals_met = all(
@@ -196,6 +299,51 @@ def run(smoke: bool = False, out: str | None = None):
          f"all_meet_sla={rf['all_meet_sla']};"
          f"retried={bench['hercules_with_failures']['n_retried']};"
          f"tail_resolves={rf['tail_resolves']}")
+
+    # Event-ordered core: the fleet kernel micro-bench (the >= 5x gate)
+    # and the hercules day re-served through the batched event core —
+    # every interval simulated query by query up to event_core_queries
+    # (vs the default 1500-query bridged window), hedges admitted in
+    # global event order.  The exact day's tail vs the bridged day's tail
+    # is the record the docs quote.
+    engine.stats_reset()
+    bench["event_core"] = {"kernels": bench_event_kernel()}
+    cap = 20_000 if smoke else 200_000
+    engine.stats_reset()
+    with timer() as t:
+        re_ = simulate_cluster_day(
+            table, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=R, transitions=transitions,
+            config=RuntimeConfig(event_core=True, event_core_queries=cap))
+    mix = {k: v for k, v in event_core.stats.items() if v}
+    day = {
+        "event_core_queries": cap,
+        "feasible": re_["feasible"],
+        "all_meet_sla": re_["all_meet_sla"],
+        "peak_power_w": re_["peak_power_w"],
+        "wall_s": t.us / 1e6,
+        "path_mix": mix,
+        "workloads": {},
+    }
+    total_exact = 0
+    for name, w in re_["workloads"].items():
+        wb = runtime["hercules"]["workloads"][name]
+        se = re_["series"]["per_workload"][name]
+        day["workloads"][name] = {
+            "n_queries": w["n_queries"],
+            "n_queries_bridged_run": wb["n_queries"],
+            "p99_ms_exact": w["p99_ms"],
+            "p99_ms_bridged": wb["p99_ms"],
+            "n_hedged": w["n_hedged"],
+            "intervals_still_capped": int(sum(se["bridged"])),
+        }
+        total_exact += w["n_queries"]
+    bench["event_core"]["day"] = day
+    emit("runtime_hercules_event", t.us,
+         f"feasible={re_['feasible']};all_meet_sla={re_['all_meet_sla']};"
+         f"queries={total_exact};cap_per_interval={cap};"
+         f"fleet_jobs={mix.get('fleet_jobs', 0)};"
+         f"peak_power={re_['peak_power_w']/1e3:.1f}kW")
 
     out_path = pathlib.Path(out)
     if not out_path.is_absolute():

@@ -8,9 +8,9 @@ ordered results.  One unseeded draw or set-iteration in a hot path silently
 turns "A beats B" into noise.
 
 Scope is the simulated paths only — ``serving/engine.py``,
-``serving/simulator.py``, ``serving/cluster_runtime.py`` and ``core/*``
-(plus the lint fixture corpus); benchmarks and tests may use wall clocks
-and ad-hoc RNG freely.
+``serving/event_core.py``, ``serving/simulator.py``,
+``serving/cluster_runtime.py`` and ``core/*`` (plus the lint fixture
+corpus); benchmarks and tests may use wall clocks and ad-hoc RNG freely.
 
 - ``determinism-global-rng``: ``np.random.<draw>`` module-level RNG calls
   (seeded constructor entry points like ``default_rng``/``SeedSequence``
@@ -53,6 +53,7 @@ RULES = {
 # lint fixture corpus (so known-bad fixtures are in scope by construction)
 _SCOPE_MARKERS = (
     "repro/serving/engine.py",
+    "repro/serving/event_core.py",
     "repro/serving/simulator.py",
     "repro/serving/cluster_runtime.py",
     "repro/core/",

@@ -58,6 +58,7 @@ from repro.core.perfmodel import (
 )
 from repro.core.workload import ModelProfile
 from repro.serving.engine import fifo_finish, fifo_finish_state
+from repro.serving.event_core import merge_event_streams
 from repro.serving.router import QueryRouter, ServerSlot
 from repro.serving.simulator import (
     _PROBE_CAP,
@@ -79,6 +80,15 @@ class RuntimeConfig:
     carry_backlog: bool = True        # continuous-time: carry pool state
     hedge_live_queue: bool = True     # hedges join the alternate's live queue
     tail_feedback: bool = True        # feed achieved tail into hysteresis
+    # --- event core (exact full-interval mode, see event_core.py) ---------
+    # event_core=True simulates every arrival of the interval (cap below,
+    # not _PROBE_CAP), extends each measured window to the interval end so
+    # nothing is bridged by stationarity, batches the per-slot k-server
+    # pools through event_core.fleet_fifo_finish, and re-serves a hedge
+    # target's own primaries event-ordered (their latencies reflect the
+    # duplicate's admission instead of keeping first-pass values)
+    event_core: bool = False
+    event_core_queries: int = 200_000  # full-interval cap per (workload, t)
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +335,110 @@ class PairService:
 
 
 # ---------------------------------------------------------------------------
+# batched slot solving (event-core fleet path)
+# ---------------------------------------------------------------------------
+
+
+def _reduce_queries(out, ends, counts, nz):
+    """Per-query max over sub-query ends (PairService.finish epilogue)."""
+    cum0 = np.concatenate([[0], np.cumsum(counts)])
+    out[nz] = np.maximum.reduceat(ends, cum0[:-1][nz])
+
+
+def _finish_many(jobs, fleet: bool = False) -> list[np.ndarray]:
+    """Finish a batch of per-slot query streams.
+
+    ``jobs`` is a list of ``(svc, qidx, ready, state)`` — one entry per
+    slot; states are updated in place.  With ``fleet=False`` this is the
+    historical sequential pass (one ``svc.finish`` per slot).  With
+    ``fleet=True`` all k > 1 front pools (cpu_model thread pools, cpu_sd
+    sparse pools) solve in one :func:`event_core.fleet_fifo_finish` call,
+    then all dependent cpu_sd dense pools in a second — amortizing the
+    per-step cost across slots (the recurrence is sequential per stream
+    but embarrassingly parallel across slots).  ``k == 1`` pools keep the
+    engine's Lindley dispatch and the accel admission/link/engine pipeline
+    stays scalar (three coupled serialized resources, not a k-server
+    pool), so every stream is bitwise-identical to its sequential
+    ``svc.finish`` result."""
+    if not fleet:
+        return [svc.finish(qidx, ready, state=state)
+                for (svc, qidx, ready, state) in jobs]
+    from repro.serving import event_core
+
+    outs: list[np.ndarray] = []
+    pre: list[tuple | None] = []
+    for (svc, qidx, ready, state) in jobs:
+        qidx = np.asarray(qidx, np.int64)
+        out = np.array(ready, dtype=np.float64, copy=True)
+        outs.append(out)
+        if len(qidx) == 0:
+            pre.append(None)
+            continue
+        sub, counts = svc._sub_index(qidx)
+        nz = counts > 0
+        if not nz.any():
+            pre.append(None)
+            continue
+        sub_ready = np.repeat(out, counts)
+        pre.append((svc, sub, counts, nz, sub_ready, svc.inv[sub], state))
+
+    stage1: list[tuple[int, tuple]] = []   # k>1 front pools
+    for j, p in enumerate(pre):
+        if p is None:
+            continue
+        svc, sub, counts, nz, sub_ready, inv, state = p
+        if svc.plan == "cpu_model" and svc.k > 1:
+            stage1.append((j, (sub_ready, svc.dur[inv], svc.k,
+                               state["pool"])))
+        elif svc.plan == "cpu_sd" and svc.k_sparse > 1:
+            stage1.append((j, (sub_ready, svc.dur_sparse[inv],
+                               svc.k_sparse, state["sparse"])))
+    ends1: dict[int, np.ndarray] = {}
+    for (j, _), (e, st_out) in zip(
+            stage1, event_core.fleet_fifo_finish([s for _, s in stage1])):
+        svc = pre[j][0]
+        ends1[j] = e
+        key = "pool" if svc.plan == "cpu_model" else "sparse"
+        pre[j][6][key] = st_out
+
+    stage2: list[tuple[int, tuple]] = []   # cpu_sd dense pools (chained)
+    for j, p in enumerate(pre):
+        if p is None:
+            continue
+        svc, sub, counts, nz, sub_ready, inv, state = p
+        if svc.plan == "cpu_model":
+            if svc.k > 1:
+                e = ends1[j]
+            else:
+                e, state["pool"] = fifo_finish_state(
+                    sub_ready, svc.dur[inv], svc.k, state["pool"])
+            _reduce_queries(outs[j], e, counts, nz)
+        elif svc.plan == "cpu_sd":
+            if svc.k_sparse > 1:
+                s_end = ends1[j]
+            else:
+                s_end, state["sparse"] = fifo_finish_state(
+                    sub_ready, svc.dur_sparse[inv], svc.k_sparse,
+                    state["sparse"])
+            if svc.k > 1:
+                stage2.append((j, (s_end, svc.dur_dense[inv], svc.k,
+                                   state["dense"])))
+            else:
+                e, state["dense"] = fifo_finish_state(
+                    s_end, svc.dur_dense[inv], svc.k, state["dense"])
+                _reduce_queries(outs[j], e, counts, nz)
+        else:
+            e = svc._accel(sub_ready, svc.sub_s[sub], state)
+            _reduce_queries(outs[j], e, counts, nz)
+    for (j, _), (e, st_out) in zip(
+            stage2, event_core.fleet_fifo_finish([s for _, s in stage2])):
+        svc, sub, counts, nz, sub_ready, inv, state = pre[j]
+        state["dense"] = st_out
+        _reduce_queries(outs[j], e, counts, nz)
+    return outs
+
+
+# ---------------------------------------------------------------------------
 # failure schedules
 # ---------------------------------------------------------------------------
 
@@ -388,6 +502,16 @@ def simulate_cluster_day(
     M, T = traces.shape
     H = len(table.servers)
     cache = SimCache(query_sizes, seed)
+    if cfg.event_core:
+        cap_q = int(cfg.event_core_queries)
+        # grow the CRN streams once, up front, to the day's largest
+        # interval population: every window is then a bitwise prefix of
+        # the same streams and no PairService ever binds stale tables
+        n_max = int(np.clip(float(traces.max()) * transitions.interval_s,
+                            64, cap_q))
+        cache.ensure(n_max)
+    else:
+        cap_q = min(cfg.queries_per_interval, _PROBE_CAP)
     services: dict[tuple[int, int], PairService] = {}
 
     def service(h: int, m: int) -> PairService:
@@ -421,7 +545,7 @@ def simulate_cluster_day(
     slot_states: list[dict[tuple[int, int], dict]] = [{} for _ in range(M)]
     n_hedged = np.zeros(M, np.int64)
     n_retried = np.zeros(M, np.int64)
-    cap_q = min(cfg.queries_per_interval, _PROBE_CAP)
+    bridged_mt: list[list] = [[None] * T for _ in range(M)]
     tail_ok_prev = True
 
     for t in range(T):
@@ -463,6 +587,14 @@ def simulate_cluster_day(
             arrivals = t0 + np.cumsum(cache.unit_gaps[:n] * (1.0 / rate))
             span = float(arrivals[-1] - arrivals[0])
             w_end = float(arrivals[-1])
+            # a window that did not reach the interval end is bridged by
+            # stationarity (the historical approximation); the event core
+            # instead measures to the interval boundary so carried backlog
+            # sees the real inter-window drain
+            bridged_mt[m][t] = bool(n == cap_q
+                                    and w_end < t0 + transitions.interval_s)
+            if cfg.event_core:
+                w_end = max(w_end, t0 + transitions.interval_s)
 
             # build the slot pool; each serving machine keeps a stable
             # (type, instance) identity so its backlog carries across
@@ -561,16 +693,21 @@ def simulate_cluster_day(
                             "no healthy servers left to retry on")
 
             streams: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+            jobs: list[tuple] = []
+            job_q: list[np.ndarray] = []
             for si, svc in enumerate(pair_of):
                 qs = np.flatnonzero((assigned == si) & ~done)
                 if len(qs) == 0:
                     continue
                 order = np.argsort(ready[qs], kind="stable")
                 qs = qs[order]
-                f = svc.finish(qs, ready[qs], state=states[si])
+                jobs.append((svc, qs, ready[qs], states[si]))
+                job_q.append(qs)
+                streams[si] = (qs, ready[qs])
+            for qs, f in zip(job_q,
+                             _finish_many(jobs, fleet=cfg.event_core)):
                 latency[qs] = f - arrivals[qs]
                 done[qs] = True
-                streams[si] = (qs, ready[qs])
 
             # straggler hedging: a duplicate issued at arrival + threshold
             # is admitted into the alternate slot's live queue — it rides
@@ -578,12 +715,50 @@ def simulate_cluster_day(
             # busy alternate cannot complete the hedge faster than its own
             # queue allows (first completion wins)
             if np.isfinite(thr) and len(slots) > 1:
-                straggler = np.flatnonzero(np.isfinite(latency)
-                                           & (latency > thr))
-                if len(straggler):
-                    t_issue = arrivals[straggler] + thr
-                    alt = router.hedge_assign(assigned[straggler], t_issue)
-                    ok = alt >= 0
+                straggler, t_issue, alt = router.hedge_events(
+                    assigned, arrivals, latency, thr)
+                ok = alt >= 0
+                if len(straggler) and cfg.event_core \
+                        and carry_in is not None:
+                    # event-ordered pass: one merged re-simulation per
+                    # target slot, duplicates interleaved into the slot's
+                    # primary stream at their issue times.  The target's
+                    # own primaries are re-served in that order, so their
+                    # latencies now REFLECT the duplicate's admission
+                    # (the exact coupling the first-pass model bridges);
+                    # each straggler keeps first-completion-wins.
+                    alts = np.unique(alt[ok])
+                    hjobs, hmeta = [], []
+                    for a in alts:
+                        sel = straggler[ok & (alt == a)]
+                        ti = arrivals[sel] + thr
+                        prim_q, prim_r = streams.get(
+                            a, (np.zeros(0, np.int64), np.zeros(0)))
+                        times, order = merge_event_streams(prim_r, ti)
+                        mq = np.concatenate([prim_q, sel])[order]
+                        st = _state_copy(carry_in[a])
+                        hjobs.append((pair_of[a], mq, times, st))
+                        hmeta.append((a, sel, prim_q, order, st))
+                    fins = _finish_many(hjobs, fleet=True)
+                    # apply all primary re-serves first, then the
+                    # duplicate minima, so a straggler that is also a
+                    # perturbed primary competes against its updated
+                    # first-pass finish
+                    dup_lat = []
+                    for (a, sel, prim_q, order, st), f_all in zip(hmeta,
+                                                                  fins):
+                        pos = np.empty(len(order), np.int64)
+                        pos[order] = np.arange(len(order))
+                        latency[prim_q] = \
+                            f_all[pos[:len(prim_q)]] - arrivals[prim_q]
+                        dup_lat.append(f_all[pos[len(prim_q):]]
+                                       - arrivals[sel])
+                        states[a] = st
+                    for (a, sel, _, _, _), hedged in zip(hmeta, dup_lat):
+                        better = hedged < latency[sel]
+                        latency[sel[better]] = hedged[better]
+                        n_hedged[m] += int(better.sum())
+                elif len(straggler):
                     for a in np.unique(alt[ok]):
                         sel = straggler[ok & (alt == a)]
                         ti = arrivals[sel] + thr
@@ -682,6 +857,11 @@ def simulate_cluster_day(
             s["n_queries"].append(int(len(ms)))
             met_t += im
         s["backlog_s"] = [float(b) for b in backlog_mt[m]]
+        # True = window hit the query cap before the interval end and the
+        # remainder is stationarity-bridged; False = fully simulated
+        # (always False under cfg.event_core unless event_core_queries is
+        # exceeded); None = interval not measured
+        s["bridged"] = bridged_mt[m]
         n_meas = sum(1 for lat in lat_mt[m] if lat is not None)
         series[name] = s
         workloads[name] = {

@@ -27,7 +27,12 @@ exact vectorization exists:
   away.  (An exact "assignment relaxation" vectorization was prototyped and
   measured: it converges only in light traffic and loses 10x under the
   overloaded probes the throughput bisection must evaluate, so it was
-  dropped.)
+  dropped.)  Large ``k > 1`` streams (``n >= 4096``) dispatch to the
+  ``event_core`` blocked kernel instead: bitwise-equal
+  speculate-and-verify blocks that win outright in light/constant-
+  duration regimes and cost a few percent when every block falls back
+  to this sweep; batches of *independent* streams should use
+  ``event_core.fleet_fifo_finish``, which is ~10x regardless of regime.
 
 Floating point: the Lindley transform reassociates max/plus, so k == 1
 fast-path finish times can differ from the reference loop by accumulated
@@ -38,16 +43,42 @@ as the reference and is bitwise-exact.
 from __future__ import annotations
 
 import heapq
+import sys
 
 import numpy as np
 
-# introspection counters (benchmarks report path mix)
-stats = {"lindley": 0, "idle": 0, "sweep": 0, "reference": 0}
+# introspection counters (benchmarks report path mix; "blocked" counts
+# dispatches to the event_core blocked kernel)
+stats = {"lindley": 0, "idle": 0, "sweep": 0, "reference": 0, "blocked": 0}
+
+# auto-dispatch threshold: below this the blocked kernel's speculation
+# setup cannot win over the plain sweep even when a path hits
+_BLOCKED_MIN_N = 4096
+
+
+def stats_reset() -> None:
+    """Reset the path-mix counters (and the event core's, if loaded).
+
+    Benchmarks report the mix per-bench and tests assert on it, so a
+    shared global counter must be resettable — ``tests/conftest.py``
+    calls this around every test."""
+    for key in stats:
+        stats[key] = 0
+    ec = sys.modules.get("repro.serving.event_core")
+    if ec is not None:
+        ec.stats_reset()
+
+
+def _event_core():
+    """Lazy import: event_core imports ``_sweep`` from this module, so
+    the dependency must not be circular at import time."""
+    from repro.serving import event_core
+    return event_core
 
 
 def fifo_finish(
     ready: np.ndarray, dur: np.ndarray, k: int, slow: bool = False,
-    free0: np.ndarray | None = None,
+    free0: np.ndarray | None = None, blocked: bool | None = None,
 ) -> np.ndarray:
     """Finish times of jobs processed FIFO (in array order) by ``k``
     identical servers, each job taken by the earliest-free server.
@@ -59,6 +90,12 @@ def fifo_finish(
     ``free0`` (length ``k``) seeds the servers' initial free times — the
     carried backlog of an earlier window.  ``None`` keeps the historical
     idle-pool start (all zeros) and its fast paths bit-for-bit.
+
+    ``blocked=True`` forces the event-core blocked kernel for ``k > 1``
+    (bitwise-equal to the sweep, see ``event_core``); ``None`` lets the
+    dispatcher pick it automatically for large streams, where its
+    speculation paths win in light/constant-duration regimes and its
+    failed-speculation overhead is a few percent otherwise.
     """
     ready = np.asarray(ready, dtype=np.float64)
     dur = np.asarray(dur, dtype=np.float64)
@@ -80,13 +117,16 @@ def fifo_finish(
         if free0 is None:
             return np.maximum(ready, 0.0) + dur
         return ready + dur
+    if blocked or (blocked is None and n >= _BLOCKED_MIN_N):
+        stats["blocked"] += 1
+        return _event_core().blocked_fifo_finish(ready, dur, k, free0=free0)
     stats["sweep"] += 1
     return _sweep(ready, dur, k, free0)
 
 
 def fifo_finish_state(
     ready: np.ndarray, dur: np.ndarray, k: int,
-    free0: np.ndarray | None = None,
+    free0: np.ndarray | None = None, blocked: bool | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """:func:`fifo_finish` plus the pool's end state — the ``k`` server
     free times after the last job, sorted ascending.  This is what a
@@ -116,6 +156,10 @@ def fifo_finish_state(
             ready + dur
         state = np.sort(np.concatenate([np.sort(free0)[len(ready):], ends]))
         return ends, state
+    if blocked or (blocked is None and len(ready) >= _BLOCKED_MIN_N):
+        stats["blocked"] += 1
+        return _event_core().blocked_fifo_finish(
+            ready, dur, k, free0=free0, return_state=True)
     stats["sweep"] += 1
     return _sweep(ready, dur, k, free0, return_state=True)
 

@@ -136,6 +136,28 @@ class QueryRouter:
             out[j] = best
         return out
 
+    def hedge_events(self, assigned: np.ndarray, arrivals: np.ndarray,
+                     latency: np.ndarray, threshold: float,
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Straggler detection + duplicate targeting as one event extraction.
+
+        Returns ``(straggler, t_issue, alt)``: indices of finite-latency
+        queries over ``threshold``, the duplicates' issue times
+        (``arrival + threshold`` — the moment the client gives up waiting),
+        and each duplicate's target slot from :meth:`hedge_assign`
+        (``-1`` = no slot accepts at issue time).  This is the runtime's
+        historical straggler selection consolidated behind the router, so
+        both the first-pass and the event-ordered hedging passes emit the
+        identical event stream."""
+        straggler = np.flatnonzero(np.isfinite(latency)
+                                   & (latency > threshold))
+        t_issue = np.asarray(arrivals, np.float64)[straggler] + threshold
+        if len(straggler) == 0:
+            return straggler, t_issue, np.zeros(0, np.int64)
+        alt = self.hedge_assign(np.asarray(assigned, np.int64)[straggler],
+                                t_issue)
+        return straggler, t_issue, alt
+
     def hedge_threshold(self) -> float:
         if len(self._lat_samples) < 32:
             return float("inf")

@@ -20,7 +20,7 @@ average/provisioned power via the PowerModel.
 
 Execution engines
 -----------------
-Every entry point takes ``engine="fast" | "reference"``:
+Every entry point takes ``engine="fast" | "reference" | "event"``:
 
 - ``fast`` (default): array-sweep pipeline — queries are split, mapped to
   duration/byte tables, and reduced back to per-query finish times with
@@ -30,6 +30,11 @@ Every entry point takes ``engine="fast" | "reference"``:
 - ``reference``: the original per-sub-query ``heapq`` loops, retained
   verbatim as the ground truth for equivalence tests and as the "before"
   engine in ``benchmarks/bench_gradient_search.py``.
+- ``event``: the fast pipeline with every k > 1 pool routed through the
+  blocked event core (:mod:`repro.serving.event_core`) regardless of
+  stream length — bitwise-identical to ``fast`` (the blocked kernel is
+  bitwise-equal to the sweep it replaces), it simply forces the new
+  path where ``fast`` would auto-dispatch only above a size threshold.
 
 Rate sweeps share work through :class:`SimCache`: the Poisson gap stream is
 drawn once at unit rate and rescaled (``exponential(1/r, n)`` is bitwise
@@ -228,6 +233,23 @@ class SimCache:
         self.sized = self.base_sizes[r.integers(0, len(self.base_sizes), _PROBE_CAP)]
         self.tables = _SizeTables(self.sized)
 
+    def ensure(self, n: int) -> None:
+        """Grow the cached streams to capacity >= ``n`` (power-of-two
+        regrowth).  NumPy ``Generator`` draws are sequential, so redrawing
+        a longer stream from the same seeds reproduces the existing prefix
+        bitwise — every probe that fit the old capacity sees identical
+        arrays after a grow.  Full-interval simulation (the runtime's
+        ``event_core`` path) calls this once up front with the day's
+        largest interval population, then every window is a prefix."""
+        cap = len(self.unit_gaps)
+        if n <= cap:
+            return
+        new = 1 << (int(n) - 1).bit_length()
+        self.unit_gaps = np.random.default_rng(self.seed).exponential(1.0, new)
+        r = np.random.default_rng(self.seed + 17)
+        self.sized = self.base_sizes[r.integers(0, len(self.base_sizes), new)]
+        self.tables = _SizeTables(self.sized)
+
 
 # ---------------------------------------------------------------------------
 # simulation entry points
@@ -247,7 +269,7 @@ def simulate(
     n = len(query_sizes)
     gaps = rng.exponential(1.0 / max(arrival_qps, 1e-9), n)
     arrivals = np.cumsum(gaps)
-    tables = _SizeTables(query_sizes) if engine == "fast" else None
+    tables = _SizeTables(query_sizes) if engine != "reference" else None
     finish, busy = _run_plan(placement, device, sched, arrivals, query_sizes,
                              engine, tables, n)
     return _metrics(finish, arrivals, busy, device, n)
@@ -292,7 +314,7 @@ def _probe(placement, device, sched, rate, sla_ms, cache, engine) -> SimResult:
     n = int(np.clip(rate * duration, _PROBE_FLOOR, _PROBE_CAP))
     arrivals = np.cumsum(cache.unit_gaps[:n] * (1.0 / max(rate, 1e-9)))
     sizes = cache.sized[:n]
-    tables = cache.tables if engine == "fast" else None
+    tables = cache.tables if engine != "reference" else None
     finish, busy = _run_plan(placement, device, sched, arrivals, sizes,
                              engine, tables, n)
     return _metrics(finish, arrivals, busy, device, n)
@@ -322,6 +344,7 @@ def _metrics(finish, arrivals, busy, device, n) -> SimResult:
 
 def _run_plan(placement, device, sched, arrivals, sizes, engine, tables, n):
     busy = {"cores": 0.0, "mem_bytes": 0.0, "engine": 0.0, "link": 0.0}
+    blk = True if engine == "event" else None
     if engine == "reference" or tables is None:
         if placement.plan == "cpu_model":
             finish = _sim_cpu_model(placement, device, sched, arrivals, sizes, busy)
@@ -333,11 +356,14 @@ def _run_plan(placement, device, sched, arrivals, sizes, engine, tables, n):
         if empty.any():  # zero-size queries finish at arrival (no work)
             finish = np.where(empty, arrivals, finish)
     elif placement.plan == "cpu_model":
-        finish = _fast_cpu_model(placement, device, sched, arrivals, busy, tables, n)
+        finish = _fast_cpu_model(placement, device, sched, arrivals, busy,
+                                 tables, n, blocked=blk)
     elif placement.plan == "cpu_sd":
-        finish = _fast_cpu_sd(placement, device, sched, arrivals, busy, tables, n)
+        finish = _fast_cpu_sd(placement, device, sched, arrivals, busy,
+                              tables, n, blocked=blk)
     else:
-        finish = _fast_accel(placement, device, sched, arrivals, busy, tables, n)
+        finish = _fast_accel(placement, device, sched, arrivals, busy,
+                             tables, n, blocked=blk)
     return finish, busy
 
 
@@ -372,7 +398,8 @@ def _sub_order(sub_a):
     return None
 
 
-def _fast_cpu_model(placement, device, sched, arrivals, busy, tables, n):
+def _fast_cpu_model(placement, device, sched, arrivals, busy, tables, n,
+                    blocked=None):
     """m threads × o workers; shared sub-query FIFO."""
     d = max(sched.batch, 1)
     sp = tables.split(d)
@@ -382,16 +409,18 @@ def _fast_cpu_model(placement, device, sched, arrivals, busy, tables, n):
     dv = tables.cpu_durations(placement.host_ops, sched.o, sched.m, d, device)[inv]
     order = _sub_order(sub_a)
     if order is None:
-        ends = fifo_finish(sub_a, dv, sched.m)
+        ends = fifo_finish(sub_a, dv, sched.m, blocked=blocked)
     else:
         ends = np.empty(ns)
-        ends[order] = fifo_finish(sub_a[order], dv[order], sched.m)
+        ends[order] = fifo_finish(sub_a[order], dv[order], sched.m,
+                                  blocked=blocked)
     busy["cores"] += float(dv.sum()) * sched.o
     busy["mem_bytes"] += float(tables.op_bytes(placement.host_ops, d)[inv].sum())
     return _finish_per_query(ends, sp["offsets"], n, arrivals)
 
 
-def _fast_cpu_sd(placement, device, sched, arrivals, busy, tables, n):
+def _fast_cpu_sd(placement, device, sched, arrivals, busy, tables, n,
+                 blocked=None):
     """Sparse pool (sd_sparse × o) -> dense pool (m × 1); dense jobs are
     processed in sub-query arrival order with ready = sparse finish."""
     d = max(sched.batch, 1)
@@ -405,12 +434,14 @@ def _fast_cpu_sd(placement, device, sched, arrivals, busy, tables, n):
     td = tables.cpu_durations(placement.host_dense, 1, m_dense, d, device)[inv]
     order = _sub_order(sub_a)
     if order is None:
-        s_end = fifo_finish(sub_a, ts, m_sparse)
-        ends = fifo_finish(s_end, td, m_dense)
+        s_end = fifo_finish(sub_a, ts, m_sparse, blocked=blocked)
+        ends = fifo_finish(s_end, td, m_dense, blocked=blocked)
     else:
-        s_end = fifo_finish(sub_a[order], ts[order], m_sparse)
+        s_end = fifo_finish(sub_a[order], ts[order], m_sparse,
+                            blocked=blocked)
         ends = np.empty(ns)
-        ends[order] = fifo_finish(s_end, td[order], m_dense)
+        ends[order] = fifo_finish(s_end, td[order], m_dense,
+                                  blocked=blocked)
     busy["cores"] += float(ts.sum()) * sched.o + float(td.sum())
     busy["mem_bytes"] += float(tables.op_bytes(placement.host_ops, d)[inv].sum())
     return _finish_per_query(ends, sp["offsets"], n, arrivals)
@@ -472,9 +503,12 @@ def _accel_pipeline(ready, tl, te, m, colo0=None, link0=0.0, eng0=0.0,
     return np.asarray(out)
 
 
-def _fast_accel(placement, device, sched, arrivals, busy, tables, n):
+def _fast_accel(placement, device, sched, arrivals, busy, tables, n,
+                blocked=None):
     """Host stage pool -> link -> engine, with m-way co-location and query
-    fusion; all duration/byte lookups are table sweeps over fused totals."""
+    fusion; all duration/byte lookups are table sweeps over fused totals.
+    The admission/link/engine pipeline itself stays scalar — it is three
+    coupled resources, not a k-server pool (see docs/cluster_serving.md)."""
     host_ops = placement.host_ops
     o = max(sched.o, 1)
     host_threads = max(device.cpu.cores // o, 1)
@@ -498,7 +532,7 @@ def _fast_accel(placement, device, sched, arrivals, busy, tables, n):
         th_u = table(("cpu_stage", host_ops, o, host_threads, device.name),
                      lambda b: cpu_stage_time(host_ops, b, o, device, host_threads))
         th = th_u[inv_t]
-        ready = fifo_finish(ready, th, host_threads)
+        ready = fifo_finish(ready, th, host_threads, blocked=blocked)
         busy["cores"] += float(th.sum()) * o
         by_u = table(("items_bytes", host_ops), lambda b: _items_bytes(host_ops, b))
         busy["mem_bytes"] += float(by_u[inv_t].sum())

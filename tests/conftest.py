@@ -11,5 +11,20 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _engine_stats_reset():
+    """Path-mix counters in repro.serving.engine / event_core are module
+    globals; reset them around every test so mix assertions cannot be
+    contaminated by test order."""
+    try:
+        from repro.serving import engine
+    except ImportError:  # collection of non-serving subsets without src
+        yield
+        return
+    engine.stats_reset()
+    yield
+    engine.stats_reset()
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

@@ -481,3 +481,106 @@ class TestSeriesAndConservation:
             assert all(b >= 0.0 for b in s["backlog_s"])
             assert 0.0 <= out["workloads"][name]["interval_sla_met_frac"] <= 1.0
         json.dumps(out["series"])  # the bench writes this block verbatim
+
+
+class TestEventCoreDay:
+    """The batched event-ordered core (RuntimeConfig(event_core=True)):
+    full-interval simulation, honest bridging flags, and bitwise agreement
+    with the default path whenever the default's windows already cover
+    their intervals."""
+
+    @staticmethod
+    def _flat_traces(table, qps, n_steps):
+        M = len(table.workloads)
+        return np.stack([diurnal_trace(qps, seed=m, n_steps=n_steps)
+                         for m in range(M)])
+
+    def test_bitwise_equal_when_windows_cover(self, small_cluster):
+        """At a rate where the default path's windows span each interval
+        uncapped (and with hedging suppressed), the event core must
+        reproduce the default day bit for bit: same per-interval latency
+        percentiles, query counts, attainment and power.  This pins the
+        k==1-via-Lindley and fleet-kernel parity end to end through
+        ``_finish_many``."""
+        table, records, profiles, servers = small_cluster
+        cfgt = TransitionConfig()
+        # peak*interval under the default 1500-query window cap
+        peak = 0.9 * 1500 / cfgt.interval_s
+        traces = self._flat_traces(table, peak, 8)
+        kw = dict(policy="hercules", servers=servers, overprovision=0.3,
+                  seed=0)
+        base = simulate_cluster_day(
+            table, records, profiles, traces, **kw,
+            config=RuntimeConfig(hedge_factor=1e9))
+        ev = simulate_cluster_day(
+            table, records, profiles, traces, **kw,
+            config=RuntimeConfig(hedge_factor=1e9, event_core=True))
+        assert base["peak_power_w"] == ev["peak_power_w"]
+        for name in table.workloads:
+            sb = base["series"]["per_workload"][name]
+            se = ev["series"]["per_workload"][name]
+            for key in ("p50_ms", "p95_ms", "p99_ms", "n_queries",
+                        "sla_attainment", "backlog_s"):
+                assert sb[key] == se[key], (name, key)
+            assert not any(sb["bridged"])
+            assert not any(se["bridged"])
+
+    def test_full_interval_retires_the_bridge(self, small_cluster):
+        """At benchmark load the default path caps each window at 1500
+        queries and bridges the remainder by stationarity; the event core
+        simulates every arrival of the interval and reports no bridging."""
+        table, records, profiles, servers = small_cluster
+        cfgt = TransitionConfig()
+        # 40 qps: 24x the default 1500-query window, yet cheap to simulate
+        traces = self._flat_traces(table, 40.0, 6)
+        cap = 60_000
+        assert float(traces.max()) * cfgt.interval_s < cap
+        base = simulate_cluster_day(table, records, profiles, traces,
+                                    policy="hercules", servers=servers,
+                                    overprovision=0.3, seed=0)
+        ev = simulate_cluster_day(
+            table, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=0.3, seed=0,
+            config=RuntimeConfig(event_core=True, event_core_queries=cap))
+        assert ev["feasible"]
+        for m, name in enumerate(table.workloads):
+            sb = base["series"]["per_workload"][name]
+            se = ev["series"]["per_workload"][name]
+            assert any(sb["bridged"])          # default truncates + bridges
+            assert not any(se["bridged"])      # event core covers the day
+            expect = np.clip(traces[m] * cfgt.interval_s, 64, cap)
+            assert se["n_queries"] == expect.astype(int).tolist()
+            # provisioning decisions ride the same efficiency table
+            assert base["peak_power_w"] == ev["peak_power_w"]
+        assert ev["all_meet_sla"], ev["workloads"]
+
+    def test_capped_event_day_stays_honest(self, small_cluster):
+        """If event_core_queries still truncates the interval, the bridged
+        flag must say so — the exactness claim is never silently faked."""
+        table, records, profiles, servers = small_cluster
+        traces = _traces(table, 0.09, 4)
+        ev = simulate_cluster_day(
+            table, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=0.3, seed=0,
+            config=RuntimeConfig(event_core=True, event_core_queries=2000))
+        for name in table.workloads:
+            se = ev["series"]["per_workload"][name]
+            assert all(se["bridged"])
+            assert se["n_queries"] == [2000] * traces.shape[1]
+
+    def test_event_ordered_hedges_fire(self, small_cluster):
+        """Full-interval populations surface real stragglers; the
+        event-ordered pass admits their duplicates into live queues and
+        the day still closes feasibly with sane latencies."""
+        table, records, profiles, servers = small_cluster
+        traces = _traces(table, 0.09, 6)
+        ev = simulate_cluster_day(
+            table, records, profiles, traces, policy="hercules",
+            servers=servers, overprovision=0.3, seed=0,
+            config=RuntimeConfig(event_core=True,
+                                 event_core_queries=40_000))
+        assert ev["feasible"]
+        n_hedged = sum(w["n_hedged"] for w in ev["workloads"].values())
+        assert n_hedged > 0
+        for w in ev["workloads"].values():
+            assert w["p99_ms"] > 0.0 and np.isfinite(w["p99_ms"])

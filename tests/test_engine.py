@@ -264,3 +264,152 @@ class TestZeroSizeQueries:
         fast = simulate(pl, dev, sched, 800.0, sizes, 0, engine="fast")
         assert abs(ref.p95_ms - fast.p95_ms) <= 1e-6 * max(ref.p95_ms, 1e-9)
         assert abs(ref.qps - fast.qps) <= 1e-6 * ref.qps
+
+
+class TestEventCoreBlocked:
+    """Bitwise equality of the event-core blocked kernel against the
+    retained scalar sweep — the kernel speculates (light-traffic merge,
+    saturated round-robin) but must never change a single bit."""
+
+    @staticmethod
+    def _stream(seed, n, distinct, sorted_r=True, zero_frac=0.0):
+        rng = np.random.default_rng(seed)
+        ready = rng.exponential(0.3, n).cumsum() * rng.uniform(0.05, 2.0)
+        if not sorted_r:
+            ready = rng.permutation(ready)
+        if distinct == 0:  # constant durations (saturated RR territory)
+            dur = np.full(n, float(rng.uniform(0.01, 1.0)))
+        else:
+            dur = rng.choice(rng.uniform(0.01, 1.0, distinct), n)
+        if zero_frac > 0.0:
+            dur[rng.random(n) < zero_frac] = 0.0
+        return ready, dur
+
+    @settings(max_examples=80, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(1, 400),
+           k=st.integers(2, 12), distinct=st.integers(0, 6),
+           block=st.sampled_from([3, 7, 33, 128, 8192]),
+           carried=st.booleans(), sorted_r=st.booleans(),
+           zeros=st.booleans())
+    def test_bitwise_vs_sweep(self, seed, n, k, distinct, block, carried,
+                              sorted_r, zeros):
+        from repro.serving import event_core
+        from repro.serving.engine import _sweep
+        ready, dur = self._stream(seed, n, distinct, sorted_r,
+                                  0.2 if zeros else 0.0)
+        free0 = (np.random.default_rng(seed + 1).uniform(0.0, 5.0, k)
+                 if carried else None)
+        ref_e, ref_s = _sweep(ready, dur, k, free0, return_state=True)
+        got_e, got_s = event_core.blocked_fifo_finish(
+            ready, dur, k, free0=free0, block=block, return_state=True)
+        assert np.array_equal(got_e, ref_e)
+        assert np.array_equal(got_s, ref_s)
+        got = event_core.blocked_fifo_finish(ready, dur, k, free0=free0,
+                                             block=block)
+        assert np.array_equal(got, ref_e)
+
+    def test_engine_dispatch_is_bitwise(self):
+        # auto-dispatch at n >= 4096 must not perturb fifo_finish results
+        from repro.serving import engine
+        rng = np.random.default_rng(3)
+        n = 5000
+        ready = rng.exponential(0.1, n).cumsum()
+        dur = rng.choice(rng.uniform(0.01, 0.5, 5), n)
+        engine.stats_reset()
+        auto = fifo_finish(ready, dur, 4)
+        assert engine.stats["blocked"] == 1
+        assert np.array_equal(auto, fifo_finish(ready, dur, 4, slow=True))
+        e, s = fifo_finish_state(ready, dur, 4, blocked=True)
+        e2, s2 = engine._sweep(ready, dur, 4, return_state=True)
+        assert np.array_equal(e, e2) and np.array_equal(s, s2)
+
+    def test_block_seams_with_carried_state(self):
+        # adversarial: block boundary exactly at a busy-period edge
+        from repro.serving import event_core
+        from repro.serving.engine import _sweep
+        ready = np.concatenate([np.zeros(10), np.full(10, 100.0)])
+        dur = np.ones(20)
+        for block in (1, 2, 9, 10, 11, 19, 20, 21):
+            for k in (2, 3, 7):
+                ref = _sweep(ready, dur, k)
+                got = event_core.blocked_fifo_finish(ready, dur, k,
+                                                     block=block)
+                assert np.array_equal(got, ref), (block, k)
+
+
+class TestEventCoreFleet:
+    """Fleet solver: many independent streams in one pass, bitwise-equal
+    per stream to the scalar sweep (both via the jitted scan and via the
+    sequential fallback)."""
+
+    @staticmethod
+    def _streams(seed, n_streams, ragged=True):
+        rng = np.random.default_rng(seed)
+        out = []
+        for i in range(n_streams):
+            n = int(rng.integers(50, 80)) if not ragged else \
+                int(rng.integers(1, 120))
+            r = rng.exponential(0.2, n).cumsum()
+            d = rng.choice(rng.uniform(0.01, 0.8, 4), n)
+            k = int(rng.choice([2, 2, 4, 8]))
+            f0 = rng.uniform(0.0, 3.0, k) if i % 3 == 0 else None
+            out.append((r, d, k, f0) if f0 is not None else (r, d, k))
+        return out
+
+    @pytest.mark.parametrize("use_jax", [None, False])
+    @pytest.mark.parametrize("seed", [0, 7, 23])
+    def test_bitwise_vs_sweep(self, seed, use_jax):
+        from repro.serving import event_core
+        from repro.serving.engine import _sweep
+        if use_jax is None:
+            pytest.importorskip("jax")
+        streams = self._streams(seed, 24)
+        got = event_core.fleet_fifo_finish(streams, use_jax=use_jax)
+        for s, (e, state) in zip(streams, got):
+            r, d, k = s[0], s[1], s[2]
+            f0 = s[3] if len(s) > 3 else None
+            ref_e, ref_s = _sweep(r, d, k, f0, return_state=True)
+            assert np.array_equal(e, ref_e)
+            assert np.array_equal(state, ref_s)
+
+    def test_empty_and_narrow(self):
+        from repro.serving import event_core
+        from repro.serving.engine import _sweep
+        assert event_core.fleet_fifo_finish([]) == []
+        # a single stream is too narrow for the scan: sequential path,
+        # still bitwise
+        r = np.array([0.0, 0.1, 0.2, 0.3])
+        d = np.array([1.0, 1.0, 1.0, 1.0])
+        event_core.stats_reset()
+        (e, s), = event_core.fleet_fifo_finish([(r, d, 2)])
+        ref_e, ref_s = _sweep(r, d, 2, return_state=True)
+        assert np.array_equal(e, ref_e) and np.array_equal(s, ref_s)
+        assert event_core.stats["fleet_seq"] == 1
+
+    def test_merge_event_streams_stable(self):
+        from repro.serving import event_core
+        a = np.array([0.0, 2.0, 2.0])
+        b = np.array([2.0, 1.0])
+        times, order = event_core.merge_event_streams(a, b)
+        assert times.tolist() == [0.0, 1.0, 2.0, 2.0, 2.0]
+        # ties: source a's events (indices < len(a)) come first
+        assert order.tolist() == [0, 4, 1, 2, 3]
+
+
+class TestSimCacheEnsure:
+    def test_regrowth_is_prefix_stable(self):
+        sizes = qsizes()
+        a = SimCache(sizes, seed=5)
+        b = SimCache(sizes, seed=5)
+        gaps0 = a.unit_gaps.copy()
+        sized0 = a.sized.copy()
+        a.ensure(50_000)
+        assert len(a.unit_gaps) >= 50_000
+        assert np.array_equal(a.unit_gaps[:len(gaps0)], gaps0)
+        assert np.array_equal(a.sized[:len(sized0)], sized0)
+        # idempotent below capacity
+        cap = len(a.unit_gaps)
+        a.ensure(10)
+        assert len(a.unit_gaps) == cap
+        # a fresh cache never grown agrees on the shared prefix
+        assert np.array_equal(b.unit_gaps, a.unit_gaps[:len(b.unit_gaps)])

@@ -12,7 +12,11 @@ CI rather than in the next full bench regeneration:
   measured interval, and beat greedy on peak provisioned power; power and
   attainment metrics must stay within tolerance of the baseline.  The
   simulation is seeded + CRN, so these numbers are deterministic — the
-  tolerances absorb float-library drift, not noise.
+  tolerances absorb float-library drift, not noise.  The same record
+  carries the event-ordered core gates: kernel speedup floors over the
+  scalar sweep (bitwise-checked by the bench before timing) and the
+  full-interval event-core day staying feasible while simulating strictly
+  more of each workload's arrivals than the bridged windows.
 - ``--search-csv`` (from ``benchmarks/bench_gradient_search.py --smoke``):
   the gradient search must stay near-optimal and meaningfully cheaper
   than exhaustive.  Wall-clock ratios on shared CI runners are noisy, so
@@ -44,6 +48,12 @@ ATTAIN_ATOL = 0.02       # absolute drop allowed on day-level attainment
 INTERVAL_ATTAIN_ATOL = 0.05  # absolute drop on the worst interval
 MIN_OPTIMALITY = 0.93    # gradient search vs exhaustive (measured: 95.1%)
 MIN_SEARCH_SPEEDUP = 1.5  # gradient vs exhaustive wall-clock (loose)
+# event-core kernels vs the scalar sweep at 1e5 jobs (bitwise-checked by
+# the bench before timing).  The saturated record is the headline
+# (measured: 7.9x); the fleet record is end-to-end incl. packing and
+# host<->XLA copies (measured: 3.2x), floored loosely for runner noise.
+MIN_EVENT_SAT_SPEEDUP = 5.0
+MIN_EVENT_FLEET_SPEEDUP = 2.0
 
 _failures: list[str] = []
 
@@ -108,6 +118,35 @@ def check_cluster_smoke(smoke_path: str, baseline_path: str) -> None:
               min(vals) >= min(base_vals) - INTERVAL_ATTAIN_ATOL,
               f"hercules/{name} worst-interval attainment within tolerance",
               f"got {min(vals):.4f}, baseline {min(base_vals):.4f}")
+
+    check_event_core(got)
+
+
+def check_event_core(got: dict) -> None:
+    """Event-ordered core gates: kernel speedups over the scalar sweep
+    (the bench asserts bitwise equality before timing, so these rows
+    cannot be won by a wrong kernel) and the full-interval hercules day."""
+    ec = got.get("event_core")
+    check(ec is not None, "bench emits an event_core record")
+    if ec is None:
+        return
+    sat = ec["kernels"]["saturated"]
+    check(sat["speedup"] >= MIN_EVENT_SAT_SPEEDUP,
+          f"event core saturated kernel >= {MIN_EVENT_SAT_SPEEDUP:.0f}x "
+          f"vs sweep at n={sat['n_jobs']}", f"got {sat['speedup']:.1f}x")
+    fl = ec["kernels"]["fleet"]
+    check(fl["speedup"] >= MIN_EVENT_FLEET_SPEEDUP,
+          f"event core fleet solver >= {MIN_EVENT_FLEET_SPEEDUP:.0f}x vs "
+          f"per-stream sweep ({fl['n_streams']} streams)",
+          f"got {fl['speedup']:.1f}x (jax={fl['jax']})")
+    day = ec["day"]
+    check(day["feasible"] and day["all_meet_sla"],
+          "event-core hercules day feasible and meets every SLA")
+    for name, w in day["workloads"].items():
+        check(w["n_queries"] > w["n_queries_bridged_run"],
+              f"event-core day simulates more of {name}'s arrivals than "
+              "the bridged run",
+              f"{w['n_queries']} vs {w['n_queries_bridged_run']}")
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +218,7 @@ def check_full_record(full_path: str) -> None:
             check(len(s["sla_attainment"]) == n_steps,
                   f"committed record: {pol}/{name} series spans the day",
                   f"{len(s['sla_attainment'])} vs {n_steps} intervals")
+    check_event_core(full)
 
 
 def main() -> int:
