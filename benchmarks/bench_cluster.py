@@ -29,33 +29,22 @@ import numpy as np
 
 import time
 
+import dataclasses
+
 from benchmarks.common import emit, timer
-from repro.configs.paper_models import PAPER_MODELS, paper_profile
-from repro.core.cluster import EfficiencyTable, TransitionConfig, provision_day
-from repro.core.devices import SERVER_TYPES
-from repro.core.efficiency import build_table
+from repro.core.cluster import provision_day
 from repro.serving import engine, event_core
-from repro.serving.cluster_runtime import (
-    RuntimeConfig,
-    failure_schedule,
-    simulate_cluster_day,
+from repro.serving.scenarios import (
+    COMPARISON_FRAC,
+    EVENT_TYPES,
+    WorkloadSpec,
+    compile_scenario,
+    full_scale,
+    get_scenario,
+    registry,
 )
-from repro.serving.diurnal import diurnal_trace, load_increment_rate
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-
-# Peak load per workload = 9% of its fleet-wide best-case capacity (the
-# highest point where the heterogeneity-oblivious baseline is still
-# feasible, so all three policies are comparable).
-COMPARISON_FRAC = 0.09
-
-# The reduced bench-gate configuration (matches examples/cluster_day.py
-# --smoke and the tests' `small_cluster` fixture, so the profile cache is
-# shared across all three).
-SMOKE_WORKLOADS = ("dlrm-rmc1", "dlrm-rmc3")
-SMOKE_SERVERS = ("T2", "T3", "T7")
-SMOKE_AVAIL = {"T2": 70, "T3": 15, "T7": 5}
-SMOKE_STEPS = 24
 
 
 def bench_event_kernel(n_jobs: int = 100_000, seed: int = 0) -> dict:
@@ -149,35 +138,20 @@ def _timed_pair(fn_a, fn_b, reps: int = 5) -> tuple[float, float]:
     return best_a, best_b
 
 
-def _scaled_loads(table: EfficiencyTable, frac: float, seeds,
-                  n_steps: int = 96) -> np.ndarray:
-    """Diurnal traces scaled so the aggregate is provisionable."""
-    cap = (table.avail[:, None] * table.qps).sum(axis=0)
-    M = len(table.workloads)
-    return np.stack([
-        diurnal_trace(frac * cap[m], seed=seeds[m], n_steps=n_steps)
-        for m in range(M)
-    ])
-
-
 def run(smoke: bool = False, out: str | None = None):
+    # The whole day is declared, not wired: the registered `baseline_day`
+    # scenario IS the bench-gate configuration (2 workloads x 3 servers,
+    # 24 intervals), and full_scale() lifts it to the paper zoo (all 6
+    # workloads x 11 server types, 96 intervals).
     if smoke:
-        profiles = {n: paper_profile(n) for n in SMOKE_WORKLOADS}
-        servers = {s: SERVER_TYPES[s] for s in SMOKE_SERVERS}
-        table, records = build_table(profiles, servers, SMOKE_AVAIL)
-        n_steps = SMOKE_STEPS
+        day = get_scenario("baseline_day")
         out = out or "BENCH_cluster_smoke.json"
     else:
-        profiles = {name: paper_profile(name) for name in PAPER_MODELS}
-        servers = None
-        table, records = build_table(profiles)
-        n_steps = 96
+        day = full_scale(get_scenario("baseline_day"), n_steps=96)
         out = out or "BENCH_cluster.json"
 
-    traces = _scaled_loads(table, COMPARISON_FRAC,
-                           seeds=list(range(len(table.workloads))),
-                           n_steps=n_steps)
-    R = max(load_increment_rate(t) for t in traces)
+    comp = compile_scenario(day)
+    table, traces, R = comp.table, comp.traces, comp.overprovision
 
     # Fig 17: provisioning-only snapshot (trusts the QPS column).
     results = {}
@@ -201,7 +175,7 @@ def run(smoke: bool = False, out: str | None = None):
     # Poisson streams + backlog carry-over) and check the savings hold with
     # every workload actually meeting its SLA — in aggregate and interval
     # by interval (the Fig. 8b analogue).
-    transitions = TransitionConfig()
+    transitions = comp.transitions
     bench = {
         "comparison_frac": COMPARISON_FRAC,
         "overprovision": float(R),
@@ -215,14 +189,20 @@ def run(smoke: bool = False, out: str | None = None):
             "feedback_boost": transitions.feedback_boost,
         },
         "policies": {},
+        # the registered scenario zoo: check_bench.py pins these names, so
+        # silently dropping a scenario from the registry fails the gate
+        "scenarios": {
+            "registered": list(registry()),
+            "event_kinds": sorted(EVENT_TYPES),
+            "descriptions": {n: get_scenario(n).description
+                             for n in registry()},
+        },
     }
     runtime = {}
     for pol in ("nh", "greedy", "hercules"):
         engine.stats_reset()
         with timer() as t:
-            runtime[pol] = simulate_cluster_day(
-                table, records, profiles, traces, policy=pol,
-                servers=servers, overprovision=R, transitions=transitions)
+            runtime[pol] = comp.run(policy=pol)
         r = runtime[pol]
         bench["policies"][pol] = {
             k: r[k] for k in (
@@ -274,19 +254,18 @@ def run(smoke: bool = False, out: str | None = None):
          f"hercules_vs_greedy_power_peak={saving:.1%};validated={validated};"
          f"all_intervals_met={all_intervals_met}")
 
-    # Fault tolerance: the same day with mid-day machine failures — the
-    # runtime re-routes in-window, carries the disruption's backlog into
-    # the following intervals, and the provisioner re-solves elastically
-    # (with achieved-tail feedback when the carried backlog bites).
-    fails = failure_schedule(traces.shape[1], len(table.servers),
-                             fail_prob=0.01, seed=7)
+    # Fault tolerance: the registered `failure_day` scenario — the same
+    # day plus a seeded failure schedule; the runtime re-routes in-window,
+    # carries the disruption's backlog into the following intervals, and
+    # the provisioner re-solves elastically (with achieved-tail feedback
+    # when the carried backlog bites).
+    fday = get_scenario("failure_day") if smoke \
+        else full_scale(get_scenario("failure_day"), n_steps=96)
+    comp_f = compile_scenario(fday)
     with timer() as t:
-        rf = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            servers=servers, overprovision=R, transitions=transitions,
-            failures=fails)
+        rf = comp_f.run()
     bench["hercules_with_failures"] = {
-        "n_failures": len(fails),
+        "n_failures": len(comp_f.failures),
         "feasible": rf["feasible"],
         "all_meet_sla": rf["all_meet_sla"],
         "n_retried": int(sum(w["n_retried"] for w in rf["workloads"].values())),
@@ -295,7 +274,7 @@ def run(smoke: bool = False, out: str | None = None):
         "peak_power_w": rf["peak_power_w"],
     }
     emit("runtime_hercules_failures", t.us,
-         f"n_failures={len(fails)};feasible={rf['feasible']};"
+         f"n_failures={len(comp_f.failures)};feasible={rf['feasible']};"
          f"all_meet_sla={rf['all_meet_sla']};"
          f"retried={bench['hercules_with_failures']['n_retried']};"
          f"tail_resolves={rf['tail_resolves']}")
@@ -310,11 +289,10 @@ def run(smoke: bool = False, out: str | None = None):
     bench["event_core"] = {"kernels": bench_event_kernel()}
     cap = 20_000 if smoke else 200_000
     engine.stats_reset()
+    comp_e = compile_scenario(dataclasses.replace(
+        day, runtime={"event_core": True, "event_core_queries": cap}))
     with timer() as t:
-        re_ = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            servers=servers, overprovision=R, transitions=transitions,
-            config=RuntimeConfig(event_core=True, event_core_queries=cap))
+        re_ = comp_e.run()
     mix = {k: v for k, v in event_core.stats.items() if v}
     day = {
         "event_core_queries": cap,
@@ -356,12 +334,17 @@ def run(smoke: bool = False, out: str | None = None):
 
     # Beyond-paper: maximum sustainable peak-load fraction per policy —
     # the LP keeps the fleet feasible well past the greedy collapse point.
+    # Each probe is the full-zoo baseline day re-declared at a different
+    # load fraction (the bundle/table is compiled once and memoized).
     for pol in ("nh", "greedy", "hercules"):
         lo = 0.0
         for frac in (0.06, 0.09, 0.12, 0.15, 0.18, 0.22, 0.26):
-            tr = _scaled_loads(table, frac, seeds=list(range(6)))
-            r = provision_day(table, tr, policy=pol,
-                              overprovision=max(load_increment_rate(t) for t in tr))
+            probe = compile_scenario(dataclasses.replace(
+                day, workloads=tuple(
+                    dataclasses.replace(w, load_frac=frac)
+                    for w in day.workloads)))
+            r = provision_day(table, probe.traces, policy=pol,
+                              overprovision=probe.overprovision)
             if r["feasible"]:
                 lo = frac
         emit(f"fig17_max_load_{pol}", 0.0, f"max_feasible_frac={lo:.2f}")

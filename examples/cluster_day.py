@@ -5,58 +5,46 @@ provisioning intervals, hedges ride live queues), and node failures
 injected mid-day (elastic re-provisioning through the router's health
 tracking plus achieved-tail feedback into the hysteresis decision).
 
+The day itself is a declaration: the registered ``failure_day`` scenario
+(see ``repro.serving.scenarios`` and docs/scenarios.md) customized with a
+harsher failure schedule, lifted to the full paper zoo by ``full_scale``
+unless ``--smoke``.
+
 Run:  PYTHONPATH=src python examples/cluster_day.py [--smoke] [--event-core]
 
-``--smoke`` profiles a reduced table (2 workloads x 3 server types, short
-day) so CI can run the full pipeline in seconds.  ``--event-core``
-re-serves the same day through the batched event-ordered core
-(``RuntimeConfig(event_core=True)``: whole intervals simulated query by
+``--smoke`` keeps the scenario's registered reduced topology (2 workloads
+x 3 server types, short day) so CI can run the full pipeline in seconds.
+``--event-core`` re-serves the same day through the batched event-ordered
+core (``runtime={"event_core": True}``: whole intervals simulated query by
 query, hedges admitted in global event order) and prints the exact p99
 next to the bridged approximation's.
 """
 import argparse
+import dataclasses
 
-import numpy as np
-
-from repro.configs.paper_models import PAPER_MODELS, paper_profile
-from repro.core.cluster import TransitionConfig
-from repro.core.devices import DEFAULT_AVAILABILITY, SERVER_TYPES
-from repro.core.efficiency import build_table
-from repro.serving.cluster_runtime import (
-    RuntimeConfig,
-    failure_schedule,
-    simulate_cluster_day,
+from repro.serving.scenarios import (
+    Event,
+    compile_scenario,
+    full_scale,
+    get_scenario,
 )
-from repro.serving.diurnal import diurnal_trace, load_increment_rate
 
 
 def main(smoke: bool = False, event_core: bool = False):
-    if smoke:
-        names = ("dlrm-rmc1", "dlrm-rmc3")
-        servers = {s: SERVER_TYPES[s] for s in ("T2", "T3", "T7")}
-        avail = {"T2": 70, "T3": 15, "T7": 5}
-        n_steps = 24
-    else:
-        names = tuple(PAPER_MODELS)
-        servers, avail = None, None
-        n_steps = 96
-    profiles = {n: paper_profile(n) for n in names}
+    # The registered failure day uses the benchmark's gentle 1% schedule;
+    # this example stresses harder: 2% per server type per interval.
+    day = dataclasses.replace(
+        get_scenario("failure_day"),
+        events=(Event.create("random_failures", fail_prob=0.02, seed=0),))
+    if not smoke:
+        day = full_scale(day, n_steps=96)
+    n_steps = day.n_steps
+
     # Profiled (workload, server) cells persist under artifacts/profiles/;
     # the first run searches every cell (fast engine), reruns replay from
     # disk (see docs/ARCHITECTURE.md "Offline profiling").
-    table, records = build_table(profiles, servers, avail, verbose=True)
-    M = len(table.workloads)
-    cap = (table.avail[:, None] * table.qps).sum(axis=0)
-    traces = np.stack([diurnal_trace(0.09 * cap[m], seed=m, n_steps=n_steps)
-                       for m in range(M)])
-    R = max(load_increment_rate(t) for t in traces)
-
-    # each server type loses a machine w.p. 2% per interval, mid-window
-    fails = failure_schedule(n_steps, len(table.servers), fail_prob=0.02,
-                             seed=0)
-    out = simulate_cluster_day(
-        table, records, profiles, traces, policy="hercules",
-        overprovision=R, transitions=TransitionConfig(), failures=fails)
+    comp = compile_scenario(day, verbose=True)
+    out = comp.run()
 
     print("\nt     power(kW)  servers  churn")
     for t in range(n_steps):
@@ -95,10 +83,9 @@ def main(smoke: bool = False, event_core: bool = False):
         # its boundary (up to the per-interval query cap) instead of a
         # 1500-query window bridged by stationarity.
         cap = 20_000 if smoke else 200_000
-        exact = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            overprovision=R, transitions=TransitionConfig(), failures=fails,
-            config=RuntimeConfig(event_core=True, event_core_queries=cap))
+        exact = compile_scenario(dataclasses.replace(
+            day, runtime={"event_core": True,
+                          "event_core_queries": cap})).run()
         assert exact["feasible"]
         print(f"\nevent core (exact, <= {cap} queries/interval) vs "
               "bridged windows:")

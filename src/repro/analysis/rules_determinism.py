@@ -9,8 +9,10 @@ turns "A beats B" into noise.
 
 Scope is the simulated paths only — ``serving/engine.py``,
 ``serving/event_core.py``, ``serving/simulator.py``,
-``serving/cluster_runtime.py`` and ``core/*`` (plus the lint fixture
-corpus); benchmarks and tests may use wall clocks and ad-hoc RNG freely.
+``serving/cluster_runtime.py``, ``serving/scenarios.py`` (scenario
+builders must thread every seed through the spec) and ``core/*`` (plus
+the lint fixture corpus); benchmarks and tests may use wall clocks and
+ad-hoc RNG freely.
 
 - ``determinism-global-rng``: ``np.random.<draw>`` module-level RNG calls
   (seeded constructor entry points like ``default_rng``/``SeedSequence``
@@ -56,6 +58,7 @@ _SCOPE_MARKERS = (
     "repro/serving/event_core.py",
     "repro/serving/simulator.py",
     "repro/serving/cluster_runtime.py",
+    "repro/serving/scenarios.py",
     "repro/core/",
     "analysis_fixtures",
 )

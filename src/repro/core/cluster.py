@@ -42,6 +42,13 @@ class EfficiencyTable:
     power: np.ndarray              # [H, M] provisioned power budget (W)
     avail: np.ndarray              # [H] available servers N_h
 
+    def fleet_capacity(self) -> np.ndarray:
+        """Best-case fleet QPS per workload ([M]): every available server
+        of every type serving that workload alone.  Scenario load fractions
+        (and the benchmarks' comparison fraction) are declared relative to
+        this bound."""
+        return (self.avail[:, None] * self.qps).sum(axis=0)
+
     def ranking(self, m: int, metric: str = "qps_per_watt") -> list[int]:
         """Server-type ranking for workload m (greedy scheduler input)."""
         if metric == "qps_per_watt":

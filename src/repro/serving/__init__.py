@@ -1,11 +1,24 @@
 """Serving substrate: query generation, batching/fusion, the discrete-event
 server simulator (vectorized engine + reference path), diurnal load traces,
-the query router, and the fleet-scale cluster serving runtime."""
+the query router, the fleet-scale cluster serving runtime, and the
+declarative scenario zoo (`repro.serving.scenarios`)."""
 from repro.serving.cluster_runtime import (  # noqa: F401
     PairService,
     RuntimeConfig,
     failure_schedule,
     simulate_cluster_day,
+)
+from repro.serving.scenarios import (  # noqa: F401
+    Event,
+    ScenarioError,
+    ScenarioSpec,
+    WorkloadSpec,
+    compile_scenario,
+    full_scale,
+    get_scenario,
+    register,
+    registry,
+    run_scenario,
 )
 from repro.serving.simulator import (  # noqa: F401
     SchedConfig,

@@ -345,20 +345,26 @@ class TestTailFeedback:
 
 @pytest.fixture(scope="module")
 def small_cluster():
-    """Profiled 2-workload x 3-server setup (hermetic profile cache)."""
+    """Profiled 2-workload x 3-server setup (hermetic profile cache) —
+    the same topology the scenario zoo registers its smoke specs on."""
+    from repro.serving.scenarios import (
+        SMOKE_AVAILABILITY,
+        SMOKE_SERVERS,
+        SMOKE_WORKLOADS,
+    )
     mp = pytest.MonkeyPatch()
     tmp = pathlib.Path(tempfile.mkdtemp())
     mp.setattr(profile_cache, "PROFILE_DIR", tmp)
-    profiles = {n: paper_profile(n) for n in ("dlrm-rmc1", "dlrm-rmc3")}
-    servers = {s: SERVER_TYPES[s] for s in ("T2", "T3", "T7")}
+    profiles = {n: paper_profile(n) for n in SMOKE_WORKLOADS}
+    servers = {s: SERVER_TYPES[s] for s in SMOKE_SERVERS}
     table, records = build_table(profiles, servers,
-                                 {"T2": 70, "T3": 15, "T7": 5})
+                                 dict(SMOKE_AVAILABILITY))
     yield table, records, profiles, servers
     mp.undo()
 
 
 def _traces(table, frac, n_steps):
-    cap = (table.avail[:, None] * table.qps).sum(axis=0)
+    cap = table.fleet_capacity()
     return np.stack([diurnal_trace(frac * cap[m], seed=m, n_steps=n_steps)
                      for m in range(len(table.workloads))])
 
@@ -387,7 +393,7 @@ class TestClusterRuntime:
         """Hysteresis: jitter inside the band never re-provisions."""
         table, records, profiles, servers = small_cluster
         M = len(table.workloads)
-        cap = (table.avail[:, None] * table.qps).sum(axis=0)
+        cap = table.fleet_capacity()
         rng = np.random.default_rng(0)
         flat = np.stack([
             0.08 * cap[m] * (1.0 + 0.02 * rng.standard_normal(12))

@@ -54,6 +54,17 @@ MIN_SEARCH_SPEEDUP = 1.5  # gradient vs exhaustive wall-clock (loose)
 # host<->XLA copies (measured: 3.2x), floored loosely for runner noise.
 MIN_EVENT_SAT_SPEEDUP = 5.0
 MIN_EVENT_FLEET_SPEEDUP = 2.0
+# The scenario zoo the bench must report as registered
+# (repro.serving.scenarios): silently dropping one from the registry —
+# and with it from the scenario-matrix test suite — fails the gate.
+EXPECTED_SCENARIOS = (
+    "baseline_day",
+    "failure_day",
+    "flash_crowd",
+    "hedge_storm",
+    "model_push_midpeak",
+    "phase_shifted",
+)
 
 _failures: list[str] = []
 
@@ -120,6 +131,20 @@ def check_cluster_smoke(smoke_path: str, baseline_path: str) -> None:
               f"got {min(vals):.4f}, baseline {min(base_vals):.4f}")
 
     check_event_core(got)
+    check_scenario_registry(got)
+
+
+def check_scenario_registry(got: dict) -> None:
+    """The bench records the registered scenario zoo; every expected
+    scenario must still be there (the matrix suite parametrizes over the
+    registry, so a dropped registration silently sheds test coverage)."""
+    reg = got.get("scenarios", {}).get("registered")
+    check(reg is not None, "bench emits the registered scenario zoo")
+    if reg is None:
+        return
+    missing = [n for n in EXPECTED_SCENARIOS if n not in reg]
+    check(not missing, "every expected scenario is registered",
+          f"registered={reg}" + (f", missing={missing}" if missing else ""))
 
 
 def check_event_core(got: dict) -> None:
