@@ -204,8 +204,9 @@ def run(smoke: bool = False, out: str | None = None):
         with timer() as t:
             runtime[pol] = comp.run(policy=pol)
         r = runtime[pol]
+        rd = r.to_dict()
         bench["policies"][pol] = {
-            k: r[k] for k in (
+            k: rd[k] for k in (
                 "peak_power_w", "avg_power_w", "peak_capacity",
                 "avg_capacity", "feasible", "all_meet_sla", "resolves",
                 "holds", "tail_resolves", "total_churn", "workloads")
@@ -219,34 +220,34 @@ def run(smoke: bool = False, out: str | None = None):
                 "p99_ms": s["p99_ms"],
                 "backlog_s": s["backlog_s"],
             }
-            for name, s in r["series"]["per_workload"].items()
+            for name, s in r.series["per_workload"].items()
         }
-        worst = min(w["sla_attainment"] for w in r["workloads"].values())
+        worst = min(w["sla_attainment"] for w in r.per_workload.values())
         worst_frac = min(w["interval_sla_met_frac"]
-                         for w in r["workloads"].values())
+                         for w in r.per_workload.values())
         # per-bench engine path mix (which FIFO solver served the day)
         mix = "/".join(f"{k}:{v}" for k, v in engine.stats.items() if v)
         bench["policies"][pol]["engine_path_mix"] = {
             k: v for k, v in engine.stats.items() if v}
         emit(f"runtime_{pol}", t.us,
-             f"peak_power={r['peak_power_w']/1e3:.1f}kW;"
-             f"all_meet_sla={r['all_meet_sla']};"
+             f"peak_power={r.peak_power_w/1e3:.1f}kW;"
+             f"all_meet_sla={r.all_meet_sla};"
              f"min_attainment={worst:.4f};"
              f"min_interval_sla_frac={worst_frac:.4f};"
-             f"resolves={r['resolves']};holds={r['holds']};"
-             f"churn={r['total_churn']};mix={mix}")
+             f"resolves={r.resolves};holds={r.holds};"
+             f"churn={r.total_churn};mix={mix}")
     gh, hh = runtime["greedy"], runtime["hercules"]
-    saving = 1 - hh["peak_power_w"] / gh["peak_power_w"]
+    saving = 1 - hh.peak_power_w / gh.peak_power_w
     all_intervals_met = all(
         all(v for v in s["meets_sla"] if v is not None)
-        for s in hh["series"]["per_workload"].values())
+        for s in hh.series["per_workload"].values())
     validated = bool(
-        hh["feasible"] and hh["all_meet_sla"] and gh["all_meet_sla"]
-        and hh["peak_power_w"] < gh["peak_power_w"])
+        hh.feasible and hh.all_meet_sla and gh.all_meet_sla
+        and hh.peak_power_w < gh.peak_power_w)
     bench["savings"] = {
         "hercules_vs_greedy_power_peak": float(saving),
         "hercules_vs_greedy_cap_peak":
-            float(1 - hh["peak_capacity"] / max(gh["peak_capacity"], 1)),
+            float(1 - hh.peak_capacity / max(gh.peak_capacity, 1)),
         "validated_at_query_granularity": validated,
         "hercules_all_intervals_meet_sla": bool(all_intervals_met),
     }
@@ -266,18 +267,19 @@ def run(smoke: bool = False, out: str | None = None):
         rf = comp_f.run()
     bench["hercules_with_failures"] = {
         "n_failures": len(comp_f.failures),
-        "feasible": rf["feasible"],
-        "all_meet_sla": rf["all_meet_sla"],
-        "n_retried": int(sum(w["n_retried"] for w in rf["workloads"].values())),
-        "tail_resolves": rf["tail_resolves"],
-        "events": rf["events"],
-        "peak_power_w": rf["peak_power_w"],
+        "feasible": rf.feasible,
+        "all_meet_sla": rf.all_meet_sla,
+        "n_retried": int(sum(w["n_retried"]
+                             for w in rf.per_workload.values())),
+        "tail_resolves": rf.tail_resolves,
+        "events": rf.events,
+        "peak_power_w": rf.peak_power_w,
     }
     emit("runtime_hercules_failures", t.us,
-         f"n_failures={len(comp_f.failures)};feasible={rf['feasible']};"
-         f"all_meet_sla={rf['all_meet_sla']};"
+         f"n_failures={len(comp_f.failures)};feasible={rf.feasible};"
+         f"all_meet_sla={rf.all_meet_sla};"
          f"retried={bench['hercules_with_failures']['n_retried']};"
-         f"tail_resolves={rf['tail_resolves']}")
+         f"tail_resolves={rf.tail_resolves}")
 
     # Event-ordered core: the fleet kernel micro-bench (the >= 5x gate)
     # and the hercules day re-served through the batched event core —
@@ -296,17 +298,17 @@ def run(smoke: bool = False, out: str | None = None):
     mix = {k: v for k, v in event_core.stats.items() if v}
     day = {
         "event_core_queries": cap,
-        "feasible": re_["feasible"],
-        "all_meet_sla": re_["all_meet_sla"],
-        "peak_power_w": re_["peak_power_w"],
+        "feasible": re_.feasible,
+        "all_meet_sla": re_.all_meet_sla,
+        "peak_power_w": re_.peak_power_w,
         "wall_s": t.us / 1e6,
         "path_mix": mix,
         "workloads": {},
     }
     total_exact = 0
-    for name, w in re_["workloads"].items():
-        wb = runtime["hercules"]["workloads"][name]
-        se = re_["series"]["per_workload"][name]
+    for name, w in re_.per_workload.items():
+        wb = runtime["hercules"].per_workload[name]
+        se = re_.series["per_workload"][name]
         day["workloads"][name] = {
             "n_queries": w["n_queries"],
             "n_queries_bridged_run": wb["n_queries"],
@@ -318,10 +320,43 @@ def run(smoke: bool = False, out: str | None = None):
         total_exact += w["n_queries"]
     bench["event_core"]["day"] = day
     emit("runtime_hercules_event", t.us,
-         f"feasible={re_['feasible']};all_meet_sla={re_['all_meet_sla']};"
+         f"feasible={re_.feasible};all_meet_sla={re_.all_meet_sla};"
          f"queries={total_exact};cap_per_interval={cap};"
          f"fleet_jobs={mix.get('fleet_jobs', 0)};"
-         f"peak_power={re_['peak_power_w']/1e3:.1f}kW")
+         f"peak_power={re_.peak_power_w/1e3:.1f}kW")
+
+    # Geo: the registered 3-region day served twice from one compile —
+    # follow-the-sun (phase-shifted peaks + capacity/RTT-aware spill, each
+    # region re-provisioned against its *post-spill* load) vs the
+    # per-region-isolated Hercules baseline.  SLA is judged at the origin:
+    # every spilled query carries its link RTT.  check_bench.py pins the
+    # global-peak-power win with every origin meeting SLA every interval.
+    comp_g = compile_scenario(get_scenario("geo_3region"))
+    with timer() as t:
+        rg_fs = comp_g.run(mode="follow_sun")
+    wall_fs = t.us / 1e6
+    with timer() as t:
+        rg_iso = comp_g.run(mode="isolated")
+    geo_win = 1.0 - rg_fs.peak_power_w / rg_iso.peak_power_w
+    bench["geo_day"] = {
+        "scenario": "geo_3region",
+        "regions": list(rg_fs.region_names),
+        "follow_sun": rg_fs.to_dict(),
+        "isolated": rg_iso.to_dict(),
+        "follow_sun_vs_isolated_power_peak": float(geo_win),
+        "wall_s": float(wall_fs + t.us / 1e6),
+    }
+    emit("runtime_geo_follow_sun", wall_fs * 1e6,
+         f"peak_power={rg_fs.peak_power_w/1e3:.1f}kW;"
+         f"win_vs_isolated={geo_win:.1%};"
+         f"all_meet_sla={rg_fs.all_meet_sla};"
+         f"all_intervals={rg_fs.all_intervals_meet_sla};"
+         f"spilled={rg_fs.n_spilled};"
+         f"spill_qps_mean={rg_fs.spilled_qps_mean:.0f}")
+    emit("runtime_geo_isolated", t.us,
+         f"peak_power={rg_iso.peak_power_w/1e3:.1f}kW;"
+         f"all_meet_sla={rg_iso.all_meet_sla};"
+         f"lost_qps_mean={rg_iso.lost_qps_mean:.0f}")
 
     out_path = pathlib.Path(out)
     if not out_path.is_absolute():

@@ -44,24 +44,24 @@ def main(smoke: bool = False, event_core: bool = False):
     # the first run searches every cell (fast engine), reruns replay from
     # disk (see docs/ARCHITECTURE.md "Offline profiling").
     comp = compile_scenario(day, verbose=True)
-    out = comp.run()
+    out = comp.run()           # a typed DayResult (attributes, not keys)
 
     print("\nt     power(kW)  servers  churn")
     for t in range(n_steps):
-        if t % max(n_steps // 12, 1) == 0 or out["churn"][t]:
-            print(f"{t:3d}   {out['power_w'][t]/1e3:8.1f}  "
-                  f"{out['capacity'][t]:7d}  {out['churn'][t]:5d}")
+        if t % max(n_steps // 12, 1) == 0 or out.churn[t]:
+            print(f"{t:3d}   {out.power[t]/1e3:8.1f}  "
+                  f"{out.capacity[t]:7d}  {out.churn[t]:5d}")
     print("\nevents:")
-    for e in out["events"]:
+    for e in out.events:
         print("  ", e)
-    print(f"\nday feasible={out['feasible']}  "
-          f"peak_power={out['peak_power_w']/1e3:.1f}kW  "
-          f"resolves={out['resolves']} holds={out['holds']} "
-          f"tail_resolves={out['tail_resolves']} "
-          f"churn={out['total_churn']}")
+    print(f"\nday feasible={out.feasible}  "
+          f"peak_power={out.peak_power_w/1e3:.1f}kW  "
+          f"resolves={out.resolves} holds={out.holds} "
+          f"tail_resolves={out.tail_resolves} "
+          f"churn={out.total_churn}")
     print(f"{'workload':<12} {'sla':>6} {'p99(ms)':>8} {'attain':>7} "
           f"{'intv_ok':>7} {'hedged':>6} {'retried':>7}")
-    for w, d in out["workloads"].items():
+    for w, d in out.per_workload.items():
         print(f"{w:<12} {d['sla_ms']:6.0f} {d['p99_ms']:8.2f} "
               f"{d['sla_attainment']:7.4f} {d['interval_sla_met_frac']:7.3f} "
               f"{d['n_hedged']:6d} {d['n_retried']:7d}")
@@ -69,14 +69,14 @@ def main(smoke: bool = False, event_core: bool = False):
     # SLA over the day (Fig. 8b view): worst interval per workload, and the
     # carried-backlog peak — where the continuous-time semantics bite
     print("\nSLA over the day (per-interval series):")
-    for w, s in out["series"]["per_workload"].items():
+    for w, s in out.series["per_workload"].items():
         idx = [t for t, a in enumerate(s["sla_attainment"]) if a is not None]
         worst_t = min(idx, key=lambda t: s["sla_attainment"][t])
         print(f"  {w:<12} worst interval t={worst_t}: "
               f"attain={s['sla_attainment'][worst_t]:.4f} "
               f"p99={s['p99_ms'][worst_t]:.2f}ms  "
               f"peak_backlog={max(s['backlog_s']):.3f}s")
-    assert out["feasible"], "day must stay feasible through failures"
+    assert out.feasible, "day must stay feasible through failures"
 
     if event_core:
         # Exact vs bridged: the same day with every interval simulated to
@@ -86,20 +86,20 @@ def main(smoke: bool = False, event_core: bool = False):
         exact = compile_scenario(dataclasses.replace(
             day, runtime={"event_core": True,
                           "event_core_queries": cap})).run()
-        assert exact["feasible"]
+        assert exact.feasible
         print(f"\nevent core (exact, <= {cap} queries/interval) vs "
               "bridged windows:")
         print(f"{'workload':<12} {'queries':>10} {'(bridged)':>10} "
               f"{'p99 exact':>10} {'(bridged)':>10} {'delta':>8}")
-        for w, d in exact["workloads"].items():
-            b = out["workloads"][w]
+        for w, d in exact.per_workload.items():
+            b = out.per_workload[w]
             delta = d["p99_ms"] - b["p99_ms"]
             print(f"{w:<12} {d['n_queries']:>10d} {b['n_queries']:>10d} "
                   f"{d['p99_ms']:>10.2f} {b['p99_ms']:>10.2f} "
                   f"{delta:>+8.2f}")
         capped = {
             w: sum(s["bridged"])
-            for w, s in exact["series"]["per_workload"].items()
+            for w, s in exact.series["per_workload"].items()
             if any(s["bridged"])
         }
         print("  intervals still capped:", capped if capped else "none — "

@@ -1,0 +1,85 @@
+"""Geo-distributed example: the registered 3-region day served twice —
+follow-the-sun (spill load across regions over the inter-region network,
+re-provision each region against its post-spill load) vs per-region-isolated
+Hercules — and the global fleet peak-power win that de-synchronizing the
+regional peaks buys.
+
+The topology is a declaration: ``geo_3region`` puts the same smoke fleet in
+us-east / eu-west / ap-south with phase-shifted diurnal curves (see
+``repro.serving.scenarios`` and docs/geo_serving.md).  SLA is judged at the
+*origin* region — every query spilled from region A and served in region B
+carries the A->B link RTT in its served latency.
+
+Run:  PYTHONPATH=src python examples/geo_day.py [--scenario NAME]
+
+``--scenario geo_partition`` severs the eu-west links mid-day;
+``--scenario geo_drain`` evacuates ap-south with make-before-break power
+accounting (try it with both modes: isolated has nowhere to put the
+evacuated load and reports it lost).
+"""
+import argparse
+
+from repro.serving.scenarios import compile_scenario, get_scenario
+
+
+def main(scenario: str = "geo_3region"):
+    comp = compile_scenario(get_scenario(scenario), verbose=True)
+    net = comp.network
+    print(f"\nscenario: {scenario}")
+    print("regions:", ", ".join(comp.region_names))
+    print("links (directed):")
+    for (i, j) in net.pairs():
+        a, b = net.regions[i], net.regions[j]
+        print(f"  {a:>8} -> {b:<8}  rtt={net.rtt_ms[(i, j)]:4.1f}ms  "
+              f"cap={net.cap_qps[(i, j)]:,.0f} qps")
+
+    out = {mode: comp.run(mode=mode)
+           for mode in ("follow_sun", "isolated")}
+
+    fs, iso = out["follow_sun"], out["isolated"]
+    print(f"\n{'mode':<12} {'peak(kW)':>9} {'avg(kW)':>9} {'feasible':>8} "
+          f"{'sla':>5} {'every-intv':>10} {'spilled':>8} {'lost qps':>9}")
+    for mode, r in out.items():
+        print(f"{mode:<12} {r.peak_power_w/1e3:9.1f} {r.avg_power_w/1e3:9.1f}"
+              f" {str(r.feasible):>8} {str(r.all_meet_sla):>5} "
+              f"{str(r.all_intervals_meet_sla):>10} {r.n_spilled:8d} "
+              f"{r.lost_qps_mean:9.1f}")
+    win = 1.0 - fs.peak_power_w / iso.peak_power_w
+    print(f"\nfollow-the-sun vs isolated global peak power: {win:+.1%}")
+
+    # Where the win comes from: each region's provisioned peak under both
+    # modes — post-spill curves flatten every region's local peak.
+    print(f"\n{'region':<10} {'iso peak(kW)':>13} {'fs peak(kW)':>12}")
+    for name in fs.region_names:
+        print(f"{name:<10} {iso.regions[name].peak_power_w/1e3:13.1f} "
+              f"{fs.regions[name].peak_power_w/1e3:12.1f}")
+
+    # Origin-view SLA: the numbers that must hold for the win to count —
+    # spilled queries are judged with their link RTT added.
+    print("\norigin-attributed SLA (follow-the-sun):")
+    print(f"{'origin':<10} {'workload':<12} {'sla':>6} {'p99(ms)':>8} "
+          f"{'attain':>7} {'spilled':>8}")
+    for rname in fs.region_names:
+        for wname, w in fs.origin[rname].items():
+            print(f"{rname:<10} {wname:<12} {w['sla_ms']:6.0f} "
+                  f"{w['p99_ms']:8.2f} {w['sla_attainment']:7.4f} "
+                  f"{w['n_spilled']:8d}")
+    if fs.events:
+        print("\nevents:")
+        for e in fs.events:
+            print("  ", e)
+
+    # the claims this example exists to demonstrate
+    assert fs.feasible and fs.all_meet_sla and fs.all_intervals_meet_sla
+    assert fs.lost_qps_mean == 0.0      # follow-the-sun loses nothing
+    if scenario == "geo_3region":
+        assert win > 0.0, "follow-the-sun must beat isolated on peak power"
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="geo_3region",
+                    choices=["geo_3region", "geo_partition", "geo_drain"],
+                    help="registered geo scenario to serve")
+    main(**vars(ap.parse_args()))

@@ -59,6 +59,7 @@ _SCOPE_MARKERS = (
     "repro/serving/simulator.py",
     "repro/serving/cluster_runtime.py",
     "repro/serving/scenarios.py",
+    "repro/serving/geo.py",
     "repro/core/",
     "analysis_fixtures",
 )

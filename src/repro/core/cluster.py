@@ -57,6 +57,25 @@ class EfficiencyTable:
             score = self.qps[:, m]
         return list(np.argsort(-score))
 
+    def with_availability(self, availability: dict[str, int]) -> "EfficiencyTable":
+        """The same profiled tuples under a different server pool.
+
+        Availability only enters provisioning through the ``avail`` column
+        — the per-pair (QPS, Power) tuples are properties of the hardware,
+        not of how many machines a site owns — so a region (or a what-if
+        sweep) that differs from an already-profiled topology only in pool
+        sizes can reuse the table without re-profiling
+        (``repro.serving.scenarios._bundle`` takes this fast path).
+        Every server type in the table must be given a count."""
+        missing = [s for s in self.servers if s not in availability]
+        if missing:
+            raise KeyError(
+                f"with_availability: no count for server type(s) "
+                f"{', '.join(missing)}")
+        return dataclasses.replace(
+            self, avail=np.array([availability[s] for s in self.servers],
+                                 np.int64))
+
 
 @dataclasses.dataclass
 class ProvisionResult:

@@ -90,6 +90,113 @@ def _simplex(c, A, b, H, M):  # pragma: no cover - scipy fallback
     return x[:n].reshape(H, M)
 
 
+def solve_geo_spill(loads: np.ndarray,
+                    qps_by_region: list[np.ndarray],
+                    power_by_region: list[np.ndarray],
+                    avail_by_region: list[np.ndarray],
+                    allowed: dict[tuple[int, int], np.ndarray],
+                    link_cap: dict[tuple[int, int], float],
+                    rtt_ms: dict[tuple[int, int], float],
+                    must_spill: np.ndarray | None = None,
+                    overprovision: np.ndarray | float = 0.0,
+                    spill_penalty: float = 1e-6):
+    """Helix-style geo placement relaxation for one interval (MILP relaxed).
+
+    Joint LP over per-region fractional server counts ``x_r`` [H_r, M] and
+    directed spill rates ``s[(i, j)]`` [M] (QPS of workload m originating
+    in region i served in region j):
+
+    minimize    sum_r x_r . power_r  +  eps * sum (1 + rtt) * s
+    subject to  sum_h x_r[h,m] qps_r[h,m] >= (1+R_r) * served_r[m]
+                served_r[m] = loads[r,m] - out_r[m] + in_r[m]
+                out_r[m] <= loads[r,m];  out_r[m] >= must_spill[r,m]
+                sum_m s[(i,j)][m] <= link_cap[(i,j)]   (per directed link)
+                sum_m x_r[h,m] <= avail_r[h]
+                s[(i,j)][m] = 0 where not allowed[(i,j)][m]
+
+    ``loads``/``must_spill``: [R, M]; ``allowed`` masks spill by the caller's
+    link/RTT/SLA budgets (Helix's "which models are servable from where").
+    The tiny RTT-weighted penalty breaks power ties toward local serving
+    and the shortest feasible link without distorting the power objective.
+    Returns ``(spill, x)`` — ``spill`` keyed like ``allowed``, ``x`` a list
+    of [H_r, M] — or ``None`` when scipy is unavailable or the program is
+    infeasible (the caller falls back to greedy water-filling).
+    """
+    if _scipy_linprog is None:  # pragma: no cover - scipy present in CI
+        return None
+    R, M = loads.shape
+    over = np.broadcast_to(np.asarray(overprovision, dtype=float), (R,))
+    if must_spill is None:
+        must_spill = np.zeros((R, M))
+    pairs = sorted(allowed)
+    x_off, n_x = [], 0
+    for r in range(R):
+        x_off.append(n_x)
+        n_x += qps_by_region[r].shape[0] * M
+    s_off = {p: n_x + k * M for k, p in enumerate(pairs)}
+    n_var = n_x + len(pairs) * M
+
+    c = np.zeros(n_var)
+    for r in range(R):
+        c[x_off[r]:x_off[r] + power_by_region[r].size] = \
+            power_by_region[r].reshape(-1)
+    for p in pairs:
+        c[s_off[p]:s_off[p] + M] = spill_penalty * (1.0 + rtt_ms[p])
+
+    rows, b = [], []
+
+    def add_row(coeffs: dict[int, float], rhs: float) -> None:
+        row = np.zeros(n_var)
+        for j, v in coeffs.items():
+            row[j] += v
+        rows.append(row)
+        b.append(rhs)
+
+    for r in range(R):
+        H_r = qps_by_region[r].shape[0]
+        for m in range(M):
+            co: dict[int, float] = {}
+            for h in range(H_r):
+                co[x_off[r] + h * M + m] = -float(qps_by_region[r][h, m])
+            for p in pairs:
+                if p[0] == r:
+                    co[s_off[p] + m] = co.get(s_off[p] + m, 0.0) \
+                        - (1.0 + over[r])
+                if p[1] == r:
+                    co[s_off[p] + m] = co.get(s_off[p] + m, 0.0) \
+                        + (1.0 + over[r])
+            add_row(co, -float(loads[r, m]) * (1.0 + over[r]))
+            out_idx = {s_off[p] + m: 1.0 for p in pairs if p[0] == r}
+            if out_idx:
+                add_row(out_idx, float(loads[r, m]))
+                if must_spill[r, m] > 0:
+                    add_row({j: -1.0 for j in out_idx},
+                            -float(must_spill[r, m]))
+            elif must_spill[r, m] > 0:
+                return None  # evacuation ordered but no outgoing link
+        for h in range(H_r):
+            add_row({x_off[r] + h * M + m: 1.0 for m in range(M)},
+                    float(avail_by_region[r][h]))
+    for p in pairs:
+        add_row({s_off[p] + m: 1.0 for m in range(M)},
+                float(link_cap[p]))
+
+    bounds = [(0, None)] * n_var
+    for p in pairs:
+        mask = np.asarray(allowed[p], dtype=bool)
+        for m in range(M):
+            if not mask[m]:
+                bounds[s_off[p] + m] = (0, 0)
+    r_ = _scipy_linprog(c, A_ub=np.array(rows), b_ub=np.array(b),
+                        bounds=bounds, method="highs")
+    if not r_.success:
+        return None
+    spill = {p: np.maximum(r_.x[s_off[p]:s_off[p] + M], 0.0) for p in pairs}
+    x = [r_.x[x_off[r]:x_off[r] + qps_by_region[r].size]
+         .reshape(qps_by_region[r].shape) for r in range(R)]
+    return spill, x
+
+
 def round_and_repair(x: np.ndarray, qps: np.ndarray, power: np.ndarray,
                      load: np.ndarray, avail: np.ndarray,
                      overprovision: float = 0.0) -> np.ndarray | None:

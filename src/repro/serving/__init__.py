@@ -1,15 +1,31 @@
 """Serving substrate: query generation, batching/fusion, the discrete-event
 server simulator (vectorized engine + reference path), diurnal load traces,
-the query router, the fleet-scale cluster serving runtime, and the
-declarative scenario zoo (`repro.serving.scenarios`)."""
+the query router, the fleet-scale cluster serving runtime with its typed
+day API (:class:`DayInputs` in, :class:`DayResult` out), the declarative
+scenario zoo (`repro.serving.scenarios`), and geo-distributed multi-region
+serving with follow-the-sun spill (`repro.serving.geo` — region topologies
+declared as :class:`RegionSpec`/:class:`LinkSpec` on a scenario spec)."""
 from repro.serving.cluster_runtime import (  # noqa: F401
+    DayInputs,
+    DayResult,
     PairService,
     RuntimeConfig,
     failure_schedule,
     simulate_cluster_day,
 )
+from repro.serving.geo import (  # noqa: F401
+    CompiledGeoScenario,
+    GeoConfig,
+    GeoDayResult,
+    GeoNetwork,
+    compile_geo_scenario,
+    plan_spill,
+    simulate_geo_day,
+)
 from repro.serving.scenarios import (  # noqa: F401
     Event,
+    LinkSpec,
+    RegionSpec,
     ScenarioError,
     ScenarioSpec,
     WorkloadSpec,
@@ -28,3 +44,37 @@ from repro.serving.simulator import (  # noqa: F401
     simulate,
     simulate_rates,
 )
+
+__all__ = [
+    "CompiledGeoScenario",
+    "DayInputs",
+    "DayResult",
+    "Event",
+    "GeoConfig",
+    "GeoDayResult",
+    "GeoNetwork",
+    "LinkSpec",
+    "PairService",
+    "RegionSpec",
+    "RuntimeConfig",
+    "ScenarioError",
+    "ScenarioSpec",
+    "SchedConfig",
+    "SimCache",
+    "SimResult",
+    "WorkloadSpec",
+    "compile_geo_scenario",
+    "compile_scenario",
+    "failure_schedule",
+    "full_scale",
+    "get_scenario",
+    "max_sustainable_qps",
+    "plan_spill",
+    "register",
+    "registry",
+    "run_scenario",
+    "simulate",
+    "simulate_cluster_day",
+    "simulate_geo_day",
+    "simulate_rates",
+]

@@ -41,6 +41,7 @@ tail_ok=...)``).  See ``docs/cluster_serving.md``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -89,6 +90,86 @@ class RuntimeConfig:
     # duplicate's admission instead of keeping first-pass values)
     event_core: bool = False
     event_core_queries: int = 200_000  # full-interval cap per (workload, t)
+    # keep the raw per-(workload, interval) latency arrays on the result
+    # (``DayResult.latencies``) — used by the geo layer to attribute spilled
+    # queries to their origin region; off by default (event-core days can
+    # measure 10^7+ queries)
+    collect_latencies: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class DayInputs:
+    """Everything :func:`simulate_cluster_day` needs about *one* day.
+
+    ``compile_scenario`` produces one of these (``CompiledScenario.inputs``);
+    hand-rolled days construct it directly.  The bundle is the day's data —
+    which policy serves it and with which runtime knobs stay call-site
+    arguments (``simulate_cluster_day(inputs, policy=..., config=...)``), so
+    the same inputs can be served under every policy for a CRN comparison.
+    """
+
+    table: EfficiencyTable
+    records: dict[str, dict]
+    profiles: dict[str, ModelProfile]
+    traces: np.ndarray                  # [M, T] per-workload diurnal loads
+    servers: dict[str, DeviceProfile] | None = None
+    overprovision: float = 0.05
+    transitions: TransitionConfig | None = None
+    failures: list[tuple[int, int, float]] | None = None
+    query_sizes: np.ndarray | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DayResult:
+    """Typed result of :func:`simulate_cluster_day`.
+
+    ``to_dict()`` reproduces the historical raw-dict shape bit-for-bit
+    (``power`` -> ``"power_w"``, ``per_workload`` -> ``"workloads"``), so
+    JSON baselines pinned against the old return value stay valid.
+    """
+
+    policy: str
+    power: np.ndarray                   # [T] provisioned W incl. drain
+    capacity: np.ndarray                # [T] machines allocated
+    churn: np.ndarray                   # [T] machines added + removed
+    feasible: bool
+    peak_power_w: float
+    avg_power_w: float
+    peak_capacity: int
+    avg_capacity: float
+    resolves: int
+    holds: int
+    tail_resolves: int
+    total_churn: int
+    per_workload: dict[str, dict]       # day-level aggregates per workload
+    series: dict                        # {"interval_s", "per_workload"}
+    all_meet_sla: bool
+    events: list[str]
+    # raw per-(workload, interval) latency seconds; populated only under
+    # RuntimeConfig(collect_latencies=True) and excluded from to_dict()
+    latencies: list[list[np.ndarray | None]] | None = None
+
+    def to_dict(self) -> dict:
+        return {
+            "policy": self.policy,
+            "power_w": self.power,
+            "capacity": self.capacity,
+            "churn": self.churn,
+            "feasible": self.feasible,
+            "peak_power_w": self.peak_power_w,
+            "avg_power_w": self.avg_power_w,
+            "peak_capacity": self.peak_capacity,
+            "avg_capacity": self.avg_capacity,
+            "resolves": self.resolves,
+            "holds": self.holds,
+            "tail_resolves": self.tail_resolves,
+            "total_churn": self.total_churn,
+            "workloads": self.per_workload,
+            "series": self.series,
+            "all_meet_sla": self.all_meet_sla,
+            "events": self.events,
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -470,10 +551,10 @@ def _percentiles(lat_ms: np.ndarray) -> tuple[float, float, float]:
 
 
 def simulate_cluster_day(
-    table: EfficiencyTable,
-    records: dict[str, dict],
-    profiles: dict[str, ModelProfile],
-    traces: np.ndarray,                 # [M, T] per-workload diurnal loads
+    inputs: DayInputs | EfficiencyTable,
+    records: dict[str, dict] | None = None,
+    profiles: dict[str, ModelProfile] | None = None,
+    traces: np.ndarray | None = None,   # [M, T] per-workload diurnal loads
     policy: str = "hercules",
     servers: dict[str, DeviceProfile] | None = None,
     overprovision: float = 0.05,
@@ -482,20 +563,44 @@ def simulate_cluster_day(
     failures: list[tuple[int, int, float]] | None = None,
     query_sizes: np.ndarray | None = None,
     seed: int = 0,
-) -> dict:
+) -> DayResult:
     """Serve a full diurnal day at query granularity, continuous in time.
 
-    ``table``/``records`` come from ``efficiency.build_table``; ``profiles``
-    maps workload name -> :class:`ModelProfile`.  Returns the provisioning
-    series (power incl. transition drain, capacity, resolves/holds/churn),
-    *achieved* per-workload latency percentiles and SLA attainment — the
-    numbers ``provision_day`` only asserts via the QPS column — plus a
-    per-interval ``series`` block (the Fig. 8b-style SLA-over-the-day
-    record) and the carried-backlog trajectory.
+    ``inputs`` is a :class:`DayInputs` (``table``/``records`` from
+    ``efficiency.build_table``, ``profiles`` mapping workload name ->
+    :class:`ModelProfile`); ``policy`` and ``config`` select how the day is
+    served.  Returns a :class:`DayResult`: the provisioning series (power
+    incl. transition drain, capacity, resolves/holds/churn), *achieved*
+    per-workload latency percentiles and SLA attainment — the numbers
+    ``provision_day`` only asserts via the QPS column — plus a per-interval
+    ``series`` block (the Fig. 8b-style SLA-over-the-day record) and the
+    carried-backlog trajectory.
+
+    The pre-``DayInputs`` 13-argument call (table/records/profiles/traces
+    passed loose) still works but raises a :class:`DeprecationWarning`; it
+    wraps the arguments into a ``DayInputs`` and is bit-identical to the
+    bundled call (pinned by ``tests/test_geo.py``).
     """
-    servers = servers or SERVER_TYPES
+    if not isinstance(inputs, DayInputs):
+        warnings.warn(
+            "simulate_cluster_day(table, records, profiles, traces, ...) is "
+            "deprecated; bundle the day into DayInputs and call "
+            "simulate_cluster_day(inputs, policy=..., config=...)",
+            DeprecationWarning, stacklevel=2)
+        inputs = DayInputs(
+            table=inputs, records=records, profiles=profiles, traces=traces,
+            servers=servers, overprovision=overprovision,
+            transitions=transitions, failures=failures,
+            query_sizes=query_sizes, seed=seed)
+    table, records, profiles = inputs.table, inputs.records, inputs.profiles
+    traces = inputs.traces
+    overprovision = inputs.overprovision
+    failures = inputs.failures
+    seed = inputs.seed
+    servers = inputs.servers or SERVER_TYPES
     cfg = config or RuntimeConfig()
-    transitions = transitions or TransitionConfig()
+    transitions = inputs.transitions or TransitionConfig()
+    query_sizes = inputs.query_sizes
     if query_sizes is None:
         from repro.core.efficiency import default_query_sizes
         query_sizes = default_query_sizes()
@@ -872,25 +977,26 @@ def simulate_cluster_day(
             "n_queries": int(len(lat_ms)), "n_hedged": int(n_hedged[m]),
             "n_retried": int(n_retried[m]),
         }
-    return {
-        "policy": policy,
-        "power_w": power,
-        "capacity": capacity,
-        "churn": churn,
-        "feasible": feasible,
-        "peak_power_w": float(power.max()),
-        "avg_power_w": float(power.mean()),
-        "peak_capacity": int(capacity.max()),
-        "avg_capacity": float(capacity.mean()),
-        "resolves": prov.n_resolves,
-        "holds": prov.n_holds,
-        "tail_resolves": prov.n_tail_resolves,
-        "total_churn": int(churn.sum()),
-        "workloads": workloads,
-        "series": {
+    return DayResult(
+        policy=policy,
+        power=power,
+        capacity=capacity,
+        churn=churn,
+        feasible=feasible,
+        peak_power_w=float(power.max()),
+        avg_power_w=float(power.mean()),
+        peak_capacity=int(capacity.max()),
+        avg_capacity=float(capacity.mean()),
+        resolves=prov.n_resolves,
+        holds=prov.n_holds,
+        tail_resolves=prov.n_tail_resolves,
+        total_churn=int(churn.sum()),
+        per_workload=workloads,
+        series={
             "interval_s": transitions.interval_s,
             "per_workload": series,
         },
-        "all_meet_sla": bool(all_meet),
-        "events": events,
-    }
+        all_meet_sla=bool(all_meet),
+        events=events,
+        latencies=lat_mt if cfg.collect_latencies else None,
+    )

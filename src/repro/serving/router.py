@@ -32,6 +32,39 @@ import numpy as np
 _GOLDEN = 0.6180339887498949  # frac(phi): lowest-discrepancy 1-D sequence
 
 
+def split_stream_by_share(n: int, shares: np.ndarray,
+                          seq: int = 0) -> np.ndarray:
+    """Partition stream positions ``0..n-1`` among ``len(shares)`` groups.
+
+    Group counts are the largest-remainder apportionment of ``n`` by
+    ``shares`` (exact: counts sum to ``n``, every position lands in exactly
+    one group); positions are interleaved by the same golden-ratio sequence
+    ``assign_stream`` uses, so each group receives an evenly spread — not
+    contiguous — slice of the stream.  Deterministic in ``(n, shares,
+    seq)``.  The geo layer uses this to attribute a merged post-spill
+    stream back to its origin regions (``repro.serving.geo``).
+    """
+    shares = np.asarray(shares, dtype=np.float64)
+    if shares.ndim != 1 or len(shares) == 0:
+        raise ValueError("shares must be a non-empty 1-D array")
+    if (shares < 0).any() or shares.sum() <= 0:
+        raise ValueError("shares must be non-negative with a positive sum")
+    out = np.empty(n, np.int64)
+    if n == 0:
+        return out
+    quota = n * shares / shares.sum()
+    counts = np.floor(quota).astype(np.int64)
+    rem = n - int(counts.sum())
+    if rem:  # largest fractional parts win; ties break to the lowest index
+        frac = quota - counts
+        order = np.lexsort((np.arange(len(shares)), -frac))
+        counts[order[:rem]] += 1
+    u = ((seq + np.arange(n)) * _GOLDEN) % 1.0
+    pos = np.argsort(u, kind="stable")
+    out[pos] = np.repeat(np.arange(len(shares), dtype=np.int64), counts)
+    return out
+
+
 @dataclasses.dataclass
 class ServerSlot:
     server_type: str

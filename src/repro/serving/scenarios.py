@@ -52,6 +52,8 @@ from repro.configs.paper_models import PAPER_MODELS, paper_profile
 from repro.core.cluster import POLICIES, EfficiencyTable, TransitionConfig
 from repro.core.devices import SERVER_TYPES
 from repro.serving.cluster_runtime import (
+    DayInputs,
+    DayResult,
     RuntimeConfig,
     failure_schedule,
     simulate_cluster_day,
@@ -165,6 +167,132 @@ class WorkloadSpec:
         if "name" not in d:
             raise ScenarioError("workload: missing required field 'name'")
         return WorkloadSpec(**d)
+
+
+# ---------------------------------------------------------------------------
+# geo-distributed regions (see repro.serving.geo for the serving semantics)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One region (datacenter) of a geo-distributed scenario.
+
+    A region re-uses the owning spec's workload curves with its local
+    clock: ``phase_hours`` shifts every workload's ``peak_hour`` /
+    ``shoulder_hour`` (mod 24), ``load_scale`` scales its offered load,
+    and ``trace_seed_offset`` decorrelates the trace jitter across
+    regions.  ``servers`` / ``availability`` of ``None`` inherit the
+    spec-level pool; overriding them gives the region its own topology.
+    """
+
+    name: str
+    phase_hours: float = 0.0
+    load_scale: float = 1.0
+    trace_seed_offset: int = 0
+    servers: tuple[str, ...] | None = None
+    availability: dict[str, int] | None = None
+
+    def __post_init__(self):
+        _coerce("region", "name", self.name, str)
+        if not self.name:
+            raise ScenarioError("region: name must be non-empty")
+        where = f"region {self.name!r}"
+        object.__setattr__(self, "phase_hours",
+                           _coerce(where, "phase_hours", self.phase_hours,
+                                   float))
+        scale = _coerce(where, "load_scale", self.load_scale, float)
+        object.__setattr__(self, "load_scale", scale)
+        if not scale > 0.0:
+            raise ScenarioError(f"{where}: load_scale must be > 0, "
+                                f"got {scale}")
+        _coerce(where, "trace_seed_offset", self.trace_seed_offset, int)
+        if self.servers is not None:
+            srv = tuple(self.servers)
+            object.__setattr__(self, "servers", srv)
+            for s in srv:
+                if s not in SERVER_TYPES:
+                    raise ScenarioError(
+                        f"{where}: unknown server type {s!r}; known: "
+                        f"{', '.join(SERVER_TYPES)}")
+            if len(set(srv)) != len(srv):
+                raise ScenarioError(f"{where}: duplicate server types")
+        if self.availability is not None:
+            _coerce(where, "availability", self.availability, dict)
+            for s, n in self.availability.items():
+                if _coerce(where, f"availability[{s!r}]", n, int) <= 0:
+                    raise ScenarioError(
+                        f"{where}: availability[{s!r}] must be > 0, got {n}")
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "phase_hours": self.phase_hours,
+            "load_scale": self.load_scale,
+            "trace_seed_offset": self.trace_seed_offset,
+            "servers": None if self.servers is None else list(self.servers),
+            "availability": None if self.availability is None
+            else dict(self.availability),
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "RegionSpec":
+        _coerce("region", "<spec>", d, dict)
+        _check_keys("region", d, {f.name for f in
+                                  dataclasses.fields(RegionSpec)})
+        if "name" not in d:
+            raise ScenarioError("region: missing required field 'name'")
+        kw = dict(d)
+        if kw.get("servers") is not None:
+            _coerce("region", "servers", kw["servers"], (list, tuple))
+            kw["servers"] = tuple(kw["servers"])
+        return RegionSpec(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One bidirectional inter-region link.
+
+    ``rtt_ms`` is the round-trip a spilled query pays on top of its remote
+    service time.  ``capacity_frac`` bounds the spill rate per direction as
+    a fraction of the *smaller* endpoint's total best-case fleet capacity
+    (summed over workloads), so a link declaration stays meaningful when
+    the topology is scaled.
+    """
+
+    a: str
+    b: str
+    rtt_ms: float
+    capacity_frac: float = 1.0
+
+    def __post_init__(self):
+        _coerce("link", "a", self.a, str)
+        _coerce("link", "b", self.b, str)
+        where = f"link {self.a!r}<->{self.b!r}"
+        if self.a == self.b:
+            raise ScenarioError(f"{where}: endpoints must differ")
+        rtt = _coerce(where, "rtt_ms", self.rtt_ms, float)
+        object.__setattr__(self, "rtt_ms", rtt)
+        if rtt < 0:
+            raise ScenarioError(f"{where}: rtt_ms must be >= 0, got {rtt}")
+        cap = _coerce(where, "capacity_frac", self.capacity_frac, float)
+        object.__setattr__(self, "capacity_frac", cap)
+        if not cap > 0:
+            raise ScenarioError(f"{where}: capacity_frac must be > 0, "
+                                f"got {cap}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "LinkSpec":
+        _coerce("link", "<spec>", d, dict)
+        _check_keys("link", d, {f.name for f in
+                                dataclasses.fields(LinkSpec)})
+        for req in ("a", "b", "rtt_ms"):
+            if req not in d:
+                raise ScenarioError(f"link: missing required field {req!r}")
+        return LinkSpec(**d)
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +427,45 @@ def _a_hedge_storm(comp, runtime, p):
     runtime["hedge_factor"] = p["hedge_factor"]
 
 
+def _known_region(spec, name) -> str | None:
+    if spec.regions is None:
+        return ("region events require a geo scenario "
+                "(ScenarioSpec.regions is None)")
+    names = [r.name for r in spec.regions]
+    if name not in names:
+        return (f"region {name!r} not in this scenario's regions "
+                f"({', '.join(names)})")
+    return None
+
+
+def _v_region_partition(spec, p):
+    return _known_region(spec, p["region"]) or _window(spec, p)
+
+
+def _a_region_partition(comp, runtime, p):
+    # consumed by the geo compiler (repro.serving.geo): severs every link
+    # touching the region over [start, end)
+    comp.partitions.append((p["region"], p["start"], p["end"]))
+
+
+def _v_region_drain(spec, p):
+    if err := _known_region(spec, p["region"]):
+        return err
+    if len(spec.regions) < 2:
+        return "region_drain needs another region to evacuate into"
+    if not 0 <= p["at"] < spec.n_steps:
+        return f"at={p['at']} outside the day (n_steps={spec.n_steps})"
+    if p["ramp"] < 1:
+        return f"ramp must be >= 1 interval, got {p['ramp']}"
+    return None
+
+
+def _a_region_drain(comp, runtime, p):
+    # consumed by the geo compiler: the region's keepable load ramps to 0
+    # over [at, at+ramp); the remainder force-spills over surviving links
+    comp.drains.append((p["region"], p["at"], p["ramp"]))
+
+
 EVENT_TYPES: dict[str, EventType] = {
     "machine_failure": EventType(
         "machine_failure",
@@ -351,7 +518,30 @@ EVENT_TYPES: dict[str, EventType] = {
                 "hedge_factor": (float, 1.2)},
         validate=_v_hedge_storm, apply=_a_hedge_storm,
         interval_fields=("start", "end")),
+    "region_partition": EventType(
+        "region_partition",
+        "network partition: every inter-region link touching `region` is "
+        "severed over intervals [start, end) — the region serves (and "
+        "spills) nothing across the partition and runs local-only",
+        fields={"region": (str, _REQUIRED), "start": (int, _REQUIRED),
+                "end": (int, _REQUIRED)},
+        validate=_v_region_partition, apply=_a_region_partition,
+        interval_fields=("start", "end")),
+    "region_drain": EventType(
+        "region_drain",
+        "whole-DC evacuation: `region`'s keepable load ramps to 0 over "
+        "`ramp` intervals from interval `at`; the evacuated load "
+        "force-spills over surviving links and the receiving regions "
+        "provision *before* the source stops serving (make-before-break "
+        "power accounting via each region's StatefulProvisioner)",
+        fields={"region": (str, _REQUIRED), "at": (int, _REQUIRED),
+                "ramp": (int, 1)},
+        validate=_v_region_drain, apply=_a_region_drain,
+        interval_fields=("at", "ramp")),
 }
+
+# event kinds consumed by the geo compiler rather than a single-region day
+GEO_EVENT_KINDS = ("region_partition", "region_drain")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -432,6 +622,10 @@ class ScenarioSpec:
     transitions: dict[str, float] = dataclasses.field(default_factory=dict)
     runtime: dict[str, Any] = dataclasses.field(default_factory=dict)
     events: tuple[Event, ...] = ()
+    # geo-distributed scenarios (repro.serving.geo): regions of phase-shifted
+    # copies of the workload curves, joined by capacity/RTT links
+    regions: tuple[RegionSpec, ...] | None = None
+    links: tuple[LinkSpec, ...] | None = None
 
     def __post_init__(self):
         _coerce("scenario", "name", self.name, str)
@@ -486,6 +680,50 @@ class ScenarioSpec:
             raise ScenarioError(
                 f"{where}: unknown policy {self.policy!r}; known: "
                 f"{', '.join(POLICIES)}")
+        if self.regions is not None:
+            reg = tuple(self.regions)
+            object.__setattr__(self, "regions", reg)
+            if not reg:
+                raise ScenarioError(f"{where}: regions must be non-empty "
+                                    "(or None for a single-DC scenario)")
+            for r in reg:
+                if not isinstance(r, RegionSpec):
+                    raise ScenarioError(f"{where}: regions must be "
+                                        f"RegionSpec, got {type(r).__name__}")
+            rnames = [r.name for r in reg]
+            if len(set(rnames)) != len(rnames):
+                raise ScenarioError(f"{where}: duplicate region names "
+                                    f"({', '.join(rnames)})")
+            for r in reg:
+                pool = r.servers if r.servers is not None else \
+                    self.server_names()
+                for s in (r.availability or {}):
+                    if s not in pool:
+                        raise ScenarioError(
+                            f"{where}: region {r.name!r} availability for "
+                            f"{s!r} which is not in its pool "
+                            f"({', '.join(pool)})")
+        if self.links is not None:
+            if self.regions is None:
+                raise ScenarioError(f"{where}: links require regions")
+            lnk = tuple(self.links)
+            object.__setattr__(self, "links", lnk)
+            rnames = [r.name for r in self.regions]
+            seen_pairs = []
+            for li in lnk:
+                if not isinstance(li, LinkSpec):
+                    raise ScenarioError(f"{where}: links must be LinkSpec, "
+                                        f"got {type(li).__name__}")
+                for end in (li.a, li.b):
+                    if end not in rnames:
+                        raise ScenarioError(
+                            f"{where}: link endpoint {end!r} is not a "
+                            f"region ({', '.join(rnames)})")
+                pair = tuple(sorted((li.a, li.b)))
+                if pair in seen_pairs:
+                    raise ScenarioError(
+                        f"{where}: duplicate link {pair[0]}<->{pair[1]}")
+                seen_pairs.append(pair)
         object.__setattr__(
             self, "transitions",
             _config_overrides(f"{where} transitions", self.transitions,
@@ -530,6 +768,10 @@ class ScenarioSpec:
             "transitions": dict(self.transitions),
             "runtime": dict(self.runtime),
             "events": [ev.to_dict() for ev in self.events],
+            "regions": None if self.regions is None
+            else [r.to_dict() for r in self.regions],
+            "links": None if self.links is None
+            else [li.to_dict() for li in self.links],
         }
 
     @staticmethod
@@ -554,6 +796,13 @@ class ScenarioSpec:
         if kw.get("servers") is not None:
             _coerce("scenario", "servers", kw["servers"], (list, tuple))
             kw["servers"] = tuple(kw["servers"])
+        if kw.get("regions") is not None:
+            _coerce("scenario", "regions", kw["regions"], (list, tuple))
+            kw["regions"] = tuple(
+                RegionSpec.from_dict(r) for r in kw["regions"])
+        if kw.get("links") is not None:
+            _coerce("scenario", "links", kw["links"], (list, tuple))
+            kw["links"] = tuple(LinkSpec.from_dict(li) for li in kw["links"])
         return ScenarioSpec(**kw)
 
 
@@ -577,10 +826,18 @@ def _bundle(spec: ScenarioSpec, verbose: bool = False):
            None if spec.availability is None
            else tuple(sorted(spec.availability.items())))
     if key not in _BUNDLES:
+        avail = None if spec.availability is None else dict(spec.availability)
+        # fast path: a bundle differing only in pool sizes reuses the
+        # profiled tuples (EfficiencyTable.with_availability) — per-region
+        # pool overrides in geo scenarios hit this instead of build_table
+        if avail is not None:
+            for k2, (t2, r2, p2, s2) in _BUNDLES.items():
+                if k2[:2] == key[:2]:
+                    _BUNDLES[key] = (t2.with_availability(avail), r2, p2, s2)
+                    return _BUNDLES[key]
         profiles = {n: paper_profile(n) for n in spec.workload_names()}
         servers = None if spec.servers is None \
             else {s: SERVER_TYPES[s] for s in spec.servers}
-        avail = None if spec.availability is None else dict(spec.availability)
         table, records = build_table(profiles, servers, avail,
                                      verbose=verbose)
         _BUNDLES[key] = (table, records, profiles, servers)
@@ -589,36 +846,70 @@ def _bundle(spec: ScenarioSpec, verbose: bool = False):
 
 @dataclasses.dataclass
 class CompiledScenario:
-    """A spec resolved to concrete ``simulate_cluster_day`` inputs."""
+    """A spec resolved to a :class:`DayInputs` bundle plus runtime config.
+
+    The day's data lives in ``inputs`` (what ``simulate_cluster_day``
+    consumes); ``table``/``traces``/... stay available as read-through
+    properties for call sites that inspect the compiled day.
+    """
 
     spec: ScenarioSpec
-    table: EfficiencyTable
-    records: dict[str, dict]
-    profiles: dict
-    servers: dict | None
-    traces: np.ndarray                       # [M, T] with events applied
-    overprovision: float
-    transitions: TransitionConfig
+    inputs: DayInputs
     config: RuntimeConfig
-    failures: list[tuple[int, int, float]]
 
-    def run(self, policy: str | None = None) -> dict:
+    @property
+    def table(self) -> EfficiencyTable:
+        return self.inputs.table
+
+    @property
+    def records(self) -> dict:
+        return self.inputs.records
+
+    @property
+    def profiles(self) -> dict:
+        return self.inputs.profiles
+
+    @property
+    def servers(self) -> dict | None:
+        return self.inputs.servers
+
+    @property
+    def traces(self) -> np.ndarray:          # [M, T] with events applied
+        return self.inputs.traces
+
+    @property
+    def overprovision(self) -> float:
+        return self.inputs.overprovision
+
+    @property
+    def transitions(self) -> TransitionConfig:
+        return self.inputs.transitions
+
+    @property
+    def failures(self) -> list[tuple[int, int, float]]:
+        return self.inputs.failures
+
+    def run(self, policy: str | None = None) -> DayResult:
         """Serve the day (``simulate_cluster_day``) under ``policy``
         (default: the spec's declared policy)."""
         return simulate_cluster_day(
-            self.table, self.records, self.profiles, self.traces,
-            policy=policy or self.spec.policy, servers=self.servers,
-            overprovision=self.overprovision, transitions=self.transitions,
-            config=self.config, failures=self.failures or None,
-            seed=self.spec.seed)
+            self.inputs, policy=policy or self.spec.policy,
+            config=self.config)
 
 
-def compile_scenario(spec: ScenarioSpec,
-                     verbose: bool = False) -> CompiledScenario:
+def compile_scenario(spec: ScenarioSpec, verbose: bool = False):
     """Resolve ``spec``: profile the topology (cached), lay the per-workload
     diurnal traces, derive the over-provision rate R from the base curves
     (unless declared), then apply the event timeline in order (traces,
-    failure list, runtime overrides)."""
+    failure list, runtime overrides).  Returns a :class:`CompiledScenario`
+    whose ``inputs`` is the :class:`DayInputs` bundle — or, for a spec with
+    ``regions``, a :class:`repro.serving.geo.CompiledGeoScenario` holding
+    one post-spill ``DayInputs`` per region."""
+    if spec.regions is not None:
+        # deferred: repro.serving.geo imports this module
+        from repro.serving.geo import compile_geo_scenario
+
+        return compile_geo_scenario(spec, verbose=verbose)
     table, records, profiles, servers = _bundle(spec, verbose=verbose)
     cap = table.fleet_capacity()
     traces = np.stack([
@@ -631,10 +922,13 @@ def compile_scenario(spec: ScenarioSpec,
     over = spec.overprovision if spec.overprovision is not None \
         else max(load_increment_rate(tr) for tr in traces)
     comp = CompiledScenario(
-        spec=spec, table=table, records=records, profiles=profiles,
-        servers=servers, traces=traces, overprovision=float(over),
-        transitions=TransitionConfig(**spec.transitions),
-        config=RuntimeConfig(), failures=[])
+        spec=spec,
+        inputs=DayInputs(
+            table=table, records=records, profiles=profiles, traces=traces,
+            servers=servers, overprovision=float(over),
+            transitions=TransitionConfig(**spec.transitions),
+            failures=[], seed=spec.seed),
+        config=RuntimeConfig())
     runtime = dict(spec.runtime)
     for ev in spec.events:
         EVENT_TYPES[ev.kind].apply(comp, runtime, ev.params)
@@ -643,8 +937,10 @@ def compile_scenario(spec: ScenarioSpec,
 
 
 def run_scenario(spec: ScenarioSpec, policy: str | None = None,
-                 verbose: bool = False) -> dict:
-    """Compile and serve ``spec`` in one call."""
+                 verbose: bool = False):
+    """Compile and serve ``spec`` in one call.  Returns a
+    :class:`DayResult` (single-DC) or a geo day result (spec with
+    ``regions``)."""
     return compile_scenario(spec, verbose=verbose).run(policy=policy)
 
 
@@ -783,3 +1079,59 @@ register(_smoke_spec(
     "duplicates contending in live queues",
     events=(Event.create("hedge_storm", start=17, end=21, factor=1.25,
                          hedge_quantile=0.9, hedge_factor=1.2),)))
+
+# The geo zoo: three regions whose evening peaks sit 7 h apart, each an
+# instance of the smoke topology, joined by a metro-scale link triangle.
+# RTTs stay inside the tightest workload SLA (dlrm-rmc1, 20 ms) so spill
+# is SLA-feasible; the rtt-budget gate in repro.serving.geo is what keeps
+# longer links out of a workload's spill set.
+#
+# Geo regions run hotter than the single-DC comparison fraction: the
+# follow-the-sun power win needs each region's peak in the convex part of
+# the power-vs-load curve (the efficient T7/T3 pools exhausted, marginal
+# load on T2 at ~3x the W/QPS), which on the smoke topology starts around
+# 28% of fleet capacity — at COMPARISON_FRAC provisioning is linear in
+# load and spilling cannot move power at all.
+GEO_FRAC = 0.32
+
+GEO_REGIONS = (
+    RegionSpec("us-east", phase_hours=0.0),
+    RegionSpec("eu-west", phase_hours=-7.0, trace_seed_offset=100),
+    RegionSpec("ap-south", phase_hours=7.0, trace_seed_offset=200),
+)
+GEO_LINKS = (
+    LinkSpec("us-east", "eu-west", rtt_ms=9.0, capacity_frac=0.5),
+    LinkSpec("eu-west", "ap-south", rtt_ms=12.0, capacity_frac=0.5),
+    LinkSpec("ap-south", "us-east", rtt_ms=6.0, capacity_frac=0.5),
+)
+
+GEO_WORKLOADS = tuple(
+    WorkloadSpec(n, load_frac=GEO_FRAC, trace_seed=i)
+    for i, n in enumerate(SMOKE_WORKLOADS))
+
+register(_smoke_spec(
+    "geo_3region",
+    "three phase-shifted regions (evening peaks 7 h apart) joined by a "
+    "link triangle: follow-the-sun spill flattens each region's served "
+    "load, de-synchronizing the global fleet peak (vs per-region-isolated "
+    "serving, the bench's geo_day comparison)",
+    workloads=GEO_WORKLOADS, regions=GEO_REGIONS, links=GEO_LINKS))
+
+register(_smoke_spec(
+    "geo_partition",
+    "geo_3region + a network partition: eu-west loses both its links over "
+    "its local evening peak (intervals [11, 15) on the shared day clock), "
+    "forcing local-only serving during the window",
+    workloads=GEO_WORKLOADS, regions=GEO_REGIONS, links=GEO_LINKS,
+    events=(Event.create("region_partition", region="eu-west",
+                         start=11, end=15),)))
+
+register(_smoke_spec(
+    "geo_drain",
+    "geo_3region + a whole-DC evacuation: ap-south drains over 2 "
+    "intervals from interval 10 (its local valley); its load force-spills "
+    "over the surviving links while the receiving regions provision "
+    "make-before-break",
+    workloads=GEO_WORKLOADS, regions=GEO_REGIONS, links=GEO_LINKS,
+    events=(Event.create("region_drain", region="ap-south",
+                         at=10, ramp=2),)))

@@ -19,6 +19,7 @@ from repro.core.devices import SERVER_TYPES
 from repro.core.efficiency import build_table, default_query_sizes
 from repro.core.partition import enumerate_placements
 from repro.serving.cluster_runtime import (
+    DayInputs,
     PairService,
     RuntimeConfig,
     _state_abs,
@@ -33,6 +34,16 @@ from repro.serving.simulator import SchedConfig, SimCache, _run_plan
 def _table1(qps=100.0, avail=20):
     return EfficiencyTable(("s0",), ("w0",), np.array([[qps]]),
                            np.array([[200.0]]), np.array([avail]))
+
+
+def _day(table, records, profiles, traces, *, policy="hercules",
+         config=None, **inputs_kw):
+    """Serve one day through the typed API: bundle the day's data into
+    :class:`DayInputs`, keep policy/config as call-site arguments."""
+    return simulate_cluster_day(
+        DayInputs(table=table, records=records, profiles=profiles,
+                  traces=traces, **inputs_kw),
+        policy=policy, config=config)
 
 
 class TestStatefulProvisioner:
@@ -208,11 +219,11 @@ class TestContinuousTime:
                                     hedge_live_queue=False,
                                     tail_feedback=False)),
         ):
-            out[label] = simulate_cluster_day(
-                t1, records, profiles, traces, policy="hercules",
+            out[label] = _day(
+                t1, records, profiles, traces,
                 servers=servers, overprovision=0.05, config=cfg, seed=0)
-        s_carry = out["carry"]["series"]["per_workload"]["dlrm-rmc1"]
-        s_reset = out["reset"]["series"]["per_workload"]["dlrm-rmc1"]
+        s_carry = out["carry"].series["per_workload"]["dlrm-rmc1"]
+        s_reset = out["reset"].series["per_workload"]["dlrm-rmc1"]
         # carried backlog compounds; the reset runtime never sees it
         assert s_carry["p95_ms"][-1] > 5.0 * s_reset["p95_ms"][-1]
         assert s_carry["backlog_s"][-1] > 5.0 * s_reset["backlog_s"][-1]
@@ -220,8 +231,8 @@ class TestContinuousTime:
         assert s_carry["backlog_s"][1] < s_carry["backlog_s"][2] < \
             s_carry["backlog_s"][3]
         # day-level tail inherits the divergence
-        assert out["carry"]["workloads"]["dlrm-rmc1"]["p99_ms"] >= \
-            out["reset"]["workloads"]["dlrm-rmc1"]["p99_ms"]
+        assert out["carry"].per_workload["dlrm-rmc1"]["p99_ms"] >= \
+            out["reset"].per_workload["dlrm-rmc1"]["p99_ms"]
 
 
 class TestLiveQueueHedging:
@@ -280,12 +291,12 @@ class TestLiveQueueHedging:
             ("live", RuntimeConfig()),
             ("optimistic", RuntimeConfig(hedge_live_queue=False)),
         ):
-            outs[label] = simulate_cluster_day(
-                table, records, profiles, traces, policy="hercules",
+            outs[label] = _day(
+                table, records, profiles, traces,
                 servers=servers, overprovision=R, config=cfg)
         for name in table.workloads:
-            live = outs["live"]["workloads"][name]
-            opt = outs["optimistic"]["workloads"][name]
+            live = outs["live"].per_workload[name]
+            opt = outs["optimistic"].per_workload[name]
             # a live-queue hedge can never beat the unloaded-service model
             assert live["p99_ms"] >= opt["p99_ms"] - 1e-9
             assert live["n_hedged"] <= opt["n_hedged"]
@@ -329,18 +340,18 @@ class TestTailFeedback:
         outs = {}
         for label, cfg in (("fb", RuntimeConfig()),
                            ("nofb", RuntimeConfig(tail_feedback=False))):
-            outs[label] = simulate_cluster_day(
-                t1, records, profiles, traces, policy="hercules",
+            outs[label] = _day(
+                t1, records, profiles, traces,
                 servers=servers, overprovision=0.05, config=cfg, seed=1)
         fb, nofb = outs["fb"], outs["nofb"]
-        assert fb["tail_resolves"] > 0 and nofb["tail_resolves"] == 0
-        assert fb["capacity"][-1] > fb["capacity"][0]       # grew the fleet
-        assert (nofb["capacity"] == nofb["capacity"][0]).all()
-        s_fb = fb["series"]["per_workload"]["dlrm-rmc1"]
-        s_no = nofb["series"]["per_workload"]["dlrm-rmc1"]
+        assert fb.tail_resolves > 0 and nofb.tail_resolves == 0
+        assert fb.capacity[-1] > fb.capacity[0]             # grew the fleet
+        assert (nofb.capacity == nofb.capacity[0]).all()
+        s_fb = fb.series["per_workload"]["dlrm-rmc1"]
+        s_no = nofb.series["per_workload"]["dlrm-rmc1"]
         assert s_fb["p95_ms"][-1] < s_no["p95_ms"][-1]      # drained
-        assert fb["workloads"]["dlrm-rmc1"]["sla_attainment"] > \
-            nofb["workloads"]["dlrm-rmc1"]["sla_attainment"]
+        assert fb.per_workload["dlrm-rmc1"]["sla_attainment"] > \
+            nofb.per_workload["dlrm-rmc1"]["sla_attainment"]
 
 
 @pytest.fixture(scope="module")
@@ -379,15 +390,15 @@ class TestClusterRuntime:
         R = max(load_increment_rate(t) for t in traces)
         out = {}
         for pol in ("greedy", "hercules"):
-            out[pol] = simulate_cluster_day(
+            out[pol] = _day(
                 table, records, profiles, traces, policy=pol,
                 servers=servers, overprovision=R)
-            assert out[pol]["feasible"], pol
-            assert out[pol]["all_meet_sla"], (pol, out[pol]["workloads"])
-            for w in out[pol]["workloads"].values():
+            assert out[pol].feasible, pol
+            assert out[pol].all_meet_sla, (pol, out[pol].per_workload)
+            for w in out[pol].per_workload.values():
                 assert w["sla_attainment"] >= 0.95
-        assert out["hercules"]["peak_power_w"] <= \
-            out["greedy"]["peak_power_w"] + 1e-6
+        assert out["hercules"].peak_power_w <= \
+            out["greedy"].peak_power_w + 1e-6
 
     def test_flat_load_holds_allocation(self, small_cluster):
         """Hysteresis: jitter inside the band never re-provisions."""
@@ -399,11 +410,10 @@ class TestClusterRuntime:
             0.08 * cap[m] * (1.0 + 0.02 * rng.standard_normal(12))
             for m in range(M)
         ])
-        out = simulate_cluster_day(table, records, profiles, flat,
-                                   policy="hercules", servers=servers,
-                                   overprovision=0.10)
-        assert out["resolves"] == 1 and out["holds"] == 11
-        assert out["total_churn"] == 0 and out["all_meet_sla"]
+        out = _day(table, records, profiles, flat,
+                   servers=servers, overprovision=0.10)
+        assert out.resolves == 1 and out.holds == 11
+        assert out.total_churn == 0 and out.all_meet_sla
 
     def test_failure_reroutes_and_reprovisions(self, small_cluster):
         """A serving machine dies mid-window: its unfinished queries retry
@@ -420,23 +430,23 @@ class TestClusterRuntime:
         # serving box (deterministic for this seed), and the surviving
         # spare lets the re-solve keep the day feasible
         traces = np.full((1, 8), 0.65 * cap)
-        out = simulate_cluster_day(
-            t1, records, profiles, traces, policy="hercules",
+        out = _day(
+            t1, records, profiles, traces,
             servers=servers, overprovision=0.05,
             failures=[(2, 0, 0.5)], seed=1)
-        assert out["feasible"]
-        assert any("serving T2 failed" in e for e in out["events"])
-        w = out["workloads"]["dlrm-rmc1"]
+        assert out.feasible
+        assert any("serving T2 failed" in e for e in out.events)
+        w = out.per_workload["dlrm-rmc1"]
         assert w["n_retried"] > 0         # in-flight queries re-dispatched
-        assert out["resolves"] >= 2       # elastic re-provision after loss
+        assert out.resolves >= 2          # elastic re-provision after loss
         # the spare absorbs the loss: steady capacity is restored
-        assert out["capacity"][-1] == out["capacity"][0]
+        assert out.capacity[-1] == out.capacity[0]
         # ~80% per-slot utilization plus a machine loss dents the tail but
         # the fleet keeps serving; the carried backlog from the failure
         # window drains again by the end of the day (continuous-time
         # recovery, not an idle-pool reset)
         assert w["sla_attainment"] > 0.85
-        s = out["series"]["per_workload"]["dlrm-rmc1"]
+        s = out.series["per_workload"]["dlrm-rmc1"]
         assert s["p95_ms"][-1] < max(s["p95_ms"][2:5])
         assert s["backlog_s"][-1] < max(s["backlog_s"][2:5])
 
@@ -447,11 +457,11 @@ class TestClusterRuntime:
         table, records, profiles, servers = small_cluster
         traces = _traces(table, 0.09, 12)
         R = max(load_increment_rate(t) for t in traces)
-        out = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
+        out = _day(
+            table, records, profiles, traces,
             servers=servers, overprovision=R,
             transitions=TransitionConfig(model_load_s=600.0, drain_s=700.0))
-        assert out["feasible"] and out["all_meet_sla"]
+        assert out.feasible and out.all_meet_sla
 
 
 class TestSeriesAndConservation:
@@ -467,26 +477,26 @@ class TestSeriesAndConservation:
         traces = _traces(table, 0.09, 12)
         R = max(load_increment_rate(t) for t in traces)
         cfgt = TransitionConfig()
-        out = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
+        out = _day(
+            table, records, profiles, traces,
             servers=servers, overprovision=R,
             failures=[(3, 0, 0.4)], seed=0)
-        assert any("failed" in e for e in out["events"])
+        assert any("failed" in e for e in out.events)
         T = traces.shape[1]
-        assert out["series"]["interval_s"] == cfgt.interval_s
+        assert out.series["interval_s"] == cfgt.interval_s
         for m, name in enumerate(table.workloads):
-            s = out["series"]["per_workload"][name]
+            s = out.series["per_workload"][name]
             for key in ("p50_ms", "p95_ms", "p99_ms", "sla_attainment",
                         "meets_sla", "n_queries", "backlog_s"):
                 assert len(s[key]) == T, key
             expect = np.clip(traces[m] * cfgt.interval_s, 64,
                              1500).astype(int)
             assert s["n_queries"] == expect.tolist()
-            assert sum(s["n_queries"]) == out["workloads"][name]["n_queries"]
+            assert sum(s["n_queries"]) == out.per_workload[name]["n_queries"]
             assert all(0.0 <= a <= 1.0 for a in s["sla_attainment"])
             assert all(b >= 0.0 for b in s["backlog_s"])
-            assert 0.0 <= out["workloads"][name]["interval_sla_met_frac"] <= 1.0
-        json.dumps(out["series"])  # the bench writes this block verbatim
+            assert 0.0 <= out.per_workload[name]["interval_sla_met_frac"] <= 1.0
+        json.dumps(out.series)  # the bench writes this block verbatim
 
 
 class TestEventCoreDay:
@@ -513,18 +523,17 @@ class TestEventCoreDay:
         # peak*interval under the default 1500-query window cap
         peak = 0.9 * 1500 / cfgt.interval_s
         traces = self._flat_traces(table, peak, 8)
-        kw = dict(policy="hercules", servers=servers, overprovision=0.3,
-                  seed=0)
-        base = simulate_cluster_day(
+        kw = dict(servers=servers, overprovision=0.3, seed=0)
+        base = _day(
             table, records, profiles, traces, **kw,
             config=RuntimeConfig(hedge_factor=1e9))
-        ev = simulate_cluster_day(
+        ev = _day(
             table, records, profiles, traces, **kw,
             config=RuntimeConfig(hedge_factor=1e9, event_core=True))
-        assert base["peak_power_w"] == ev["peak_power_w"]
+        assert base.peak_power_w == ev.peak_power_w
         for name in table.workloads:
-            sb = base["series"]["per_workload"][name]
-            se = ev["series"]["per_workload"][name]
+            sb = base.series["per_workload"][name]
+            se = ev.series["per_workload"][name]
             for key in ("p50_ms", "p95_ms", "p99_ms", "n_queries",
                         "sla_attainment", "backlog_s"):
                 assert sb[key] == se[key], (name, key)
@@ -541,36 +550,35 @@ class TestEventCoreDay:
         traces = self._flat_traces(table, 40.0, 6)
         cap = 60_000
         assert float(traces.max()) * cfgt.interval_s < cap
-        base = simulate_cluster_day(table, records, profiles, traces,
-                                    policy="hercules", servers=servers,
-                                    overprovision=0.3, seed=0)
-        ev = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
+        base = _day(table, records, profiles, traces,
+                    servers=servers, overprovision=0.3, seed=0)
+        ev = _day(
+            table, records, profiles, traces,
             servers=servers, overprovision=0.3, seed=0,
             config=RuntimeConfig(event_core=True, event_core_queries=cap))
-        assert ev["feasible"]
+        assert ev.feasible
         for m, name in enumerate(table.workloads):
-            sb = base["series"]["per_workload"][name]
-            se = ev["series"]["per_workload"][name]
+            sb = base.series["per_workload"][name]
+            se = ev.series["per_workload"][name]
             assert any(sb["bridged"])          # default truncates + bridges
             assert not any(se["bridged"])      # event core covers the day
             expect = np.clip(traces[m] * cfgt.interval_s, 64, cap)
             assert se["n_queries"] == expect.astype(int).tolist()
             # provisioning decisions ride the same efficiency table
-            assert base["peak_power_w"] == ev["peak_power_w"]
-        assert ev["all_meet_sla"], ev["workloads"]
+            assert base.peak_power_w == ev.peak_power_w
+        assert ev.all_meet_sla, ev.per_workload
 
     def test_capped_event_day_stays_honest(self, small_cluster):
         """If event_core_queries still truncates the interval, the bridged
         flag must say so — the exactness claim is never silently faked."""
         table, records, profiles, servers = small_cluster
         traces = _traces(table, 0.09, 4)
-        ev = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
+        ev = _day(
+            table, records, profiles, traces,
             servers=servers, overprovision=0.3, seed=0,
             config=RuntimeConfig(event_core=True, event_core_queries=2000))
         for name in table.workloads:
-            se = ev["series"]["per_workload"][name]
+            se = ev.series["per_workload"][name]
             assert all(se["bridged"])
             assert se["n_queries"] == [2000] * traces.shape[1]
 
@@ -580,13 +588,13 @@ class TestEventCoreDay:
         the day still closes feasibly with sane latencies."""
         table, records, profiles, servers = small_cluster
         traces = _traces(table, 0.09, 6)
-        ev = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
+        ev = _day(
+            table, records, profiles, traces,
             servers=servers, overprovision=0.3, seed=0,
             config=RuntimeConfig(event_core=True,
                                  event_core_queries=40_000))
-        assert ev["feasible"]
-        n_hedged = sum(w["n_hedged"] for w in ev["workloads"].values())
+        assert ev.feasible
+        n_hedged = sum(w["n_hedged"] for w in ev.per_workload.values())
         assert n_hedged > 0
-        for w in ev["workloads"].values():
+        for w in ev.per_workload.values():
             assert w["p99_ms"] > 0.0 and np.isfinite(w["p99_ms"])

@@ -31,6 +31,7 @@ from repro.core.devices import SERVER_TYPES
 from repro.core.efficiency import build_table
 from repro.serving import scenarios as sc
 from repro.serving.cluster_runtime import (
+    DayInputs,
     RuntimeConfig,
     failure_schedule,
     simulate_cluster_day,
@@ -107,9 +108,10 @@ def zoo_days():
 class TestScenarioMatrix:
     def test_zoo_is_populated(self):
         """The registry carries the documented zoo, including the two
-        golden re-declarations."""
-        assert len(registry()) >= 6
-        assert {"baseline_day", "failure_day"} <= set(registry())
+        golden re-declarations and the geo scenarios."""
+        assert len(registry()) >= 9
+        assert {"baseline_day", "failure_day", "geo_3region",
+                "geo_partition", "geo_drain"} <= set(registry())
 
     @pytest.mark.parametrize("name", sorted(sc._REGISTRY))
     def test_scenario_smoke_day(self, name, zoo_days):
@@ -117,29 +119,43 @@ class TestScenarioMatrix:
         registered scenario — registration is the test plan."""
         spec = get_scenario(name)
         out = zoo_days[name]
-        assert out["feasible"], f"{name}: day infeasible"
         T = spec.n_steps
-        assert out["series"]["interval_s"] > 0
+        if spec.regions is not None:
+            # geo scenario: a GeoDayResult — one served day per region
+            # plus origin-attributed SLA records (test_geo.py covers the
+            # spill semantics; the matrix pins feasibility and schema)
+            assert out.feasible, f"{name}: geo day infeasible"
+            assert set(out.region_names) == {r.name for r in spec.regions}
+            assert len(out.power) == T
+            for rname in out.region_names:
+                for wname, w in out.origin[rname].items():
+                    assert 0.0 <= w["sla_attainment"] <= 1.0, (name, rname)
+                    assert w["n_queries"] > 0, (name, rname, wname)
+            json.dumps(out.to_dict())    # the bench writes this verbatim
+            return
+        assert out.feasible, f"{name}: day infeasible"
+        assert out.series["interval_s"] > 0
         served = [w.name for w in spec.workloads
-                  if w.name in out["series"]["per_workload"]]
+                  if w.name in out.series["per_workload"]]
         assert served, name
         for wname in served:
-            s = out["series"]["per_workload"][wname]
+            s = out.series["per_workload"][wname]
             for key in ("p50_ms", "p95_ms", "p99_ms", "sla_attainment",
                         "meets_sla", "n_queries", "backlog_s", "bridged"):
                 assert len(s[key]) == T, (name, wname, key)
             assert sum(s["n_queries"]) == \
-                out["workloads"][wname]["n_queries"], (name, wname)
+                out.per_workload[wname]["n_queries"], (name, wname)
             assert all(0.0 <= a <= 1.0 for a in s["sla_attainment"]
                        if a is not None), (name, wname)
             assert all(b >= 0.0 for b in s["backlog_s"]), (name, wname)
-        json.dumps(out["series"])    # the bench writes this block verbatim
+        json.dumps(out.series)       # the bench writes this block verbatim
 
     @pytest.mark.parametrize("name", sorted(sc._REGISTRY))
     def test_scenario_deterministic(self, name, zoo_days):
         """Two independent compile+run passes are bit-identical — every
         source of randomness flows through seeds declared in the spec."""
-        _assert_day_equal(zoo_days[name], run_scenario(get_scenario(name)))
+        _assert_day_equal(zoo_days[name].to_dict(),
+                          run_scenario(get_scenario(name)).to_dict())
 
     @pytest.mark.parametrize("name", sorted(sc._REGISTRY))
     def test_scenario_round_trips(self, name):
@@ -176,13 +192,14 @@ class TestGoldenEquivalence:
         validation day, bit for bit (so BENCH_cluster*.json is pinned)."""
         table, records, profiles, servers, traces, R = hand_wired
         ref = simulate_cluster_day(
-            table, records, profiles, traces, policy=policy,
-            servers=servers, overprovision=R,
-            transitions=TransitionConfig())
+            DayInputs(table=table, records=records, profiles=profiles,
+                      traces=traces, servers=servers, overprovision=R,
+                      transitions=TransitionConfig()),
+            policy=policy)
         comp = compile_scenario(get_scenario("baseline_day"))
         assert np.array_equal(comp.traces, traces)
         assert comp.overprovision == R
-        _assert_day_equal(ref, comp.run(policy=policy))
+        _assert_day_equal(ref.to_dict(), comp.run(policy=policy).to_dict())
 
     def test_failure_day_matches_bench_wiring(self, hand_wired):
         """The registered failure_day == bench_cluster.py's fault-tolerance
@@ -191,12 +208,12 @@ class TestGoldenEquivalence:
         fails = failure_schedule(traces.shape[1], len(table.servers),
                                  fail_prob=0.01, seed=7)
         ref = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            servers=servers, overprovision=R,
-            transitions=TransitionConfig(), failures=fails)
+            DayInputs(table=table, records=records, profiles=profiles,
+                      traces=traces, servers=servers, overprovision=R,
+                      transitions=TransitionConfig(), failures=fails))
         comp = compile_scenario(get_scenario("failure_day"))
         assert comp.failures == fails
-        _assert_day_equal(ref, comp.run())
+        _assert_day_equal(ref.to_dict(), comp.run().to_dict())
 
     def test_example_day_matches_example_wiring(self, hand_wired):
         """examples/cluster_day.py's customized failure day (2% / seed 0,
@@ -208,19 +225,18 @@ class TestGoldenEquivalence:
             get_scenario("failure_day"),
             events=(Event.create("random_failures", fail_prob=0.02,
                                  seed=0),))
-        ref = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            overprovision=R, transitions=TransitionConfig(),
-            failures=fails)
-        _assert_day_equal(ref, run_scenario(day))
+        inputs = DayInputs(table=table, records=records, profiles=profiles,
+                           traces=traces, overprovision=R,
+                           transitions=TransitionConfig(), failures=fails)
+        ref = simulate_cluster_day(inputs)
+        _assert_day_equal(ref.to_dict(), run_scenario(day).to_dict())
         cap = 20_000
         ref_exact = simulate_cluster_day(
-            table, records, profiles, traces, policy="hercules",
-            overprovision=R, transitions=TransitionConfig(), failures=fails,
+            inputs,
             config=RuntimeConfig(event_core=True, event_core_queries=cap))
         exact = run_scenario(dataclasses.replace(
             day, runtime={"event_core": True, "event_core_queries": cap}))
-        _assert_day_equal(ref_exact, exact)
+        _assert_day_equal(ref_exact.to_dict(), exact.to_dict())
 
 
 # ---------------------------------------------------------------------------
