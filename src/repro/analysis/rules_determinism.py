@@ -60,6 +60,10 @@ _SCOPE_MARKERS = (
     "repro/serving/cluster_runtime.py",
     "repro/serving/scenarios.py",
     "repro/serving/geo.py",
+    # repro/core/ below already covers the packing module; named so the
+    # co-location hot path stays in scope even if the package-wide marker
+    # is ever narrowed
+    "repro/core/colocation.py",
     "repro/core/",
     "analysis_fixtures",
 )

@@ -103,7 +103,41 @@ PAPER_MODELS = {
     "dien": dien,
 }
 
+# LM-decode serving workloads (ModelProfile builders, not RecsysConfigs):
+# token-granular decode streams that share accelerator hosts with the
+# recommendation fleet in the co-location scenarios.  Kept out of
+# PAPER_MODELS so the paper-scale sweeps (and the headline power-saving
+# record) iterate exactly Table I; the config import is deferred because
+# the config modules pull in jax at module scope.
+LM_CONTEXT = 1024
+# One "query" is a full 64-1024-token generation (the query-size sample
+# counts decode tokens), so the SLA is per-generation; at 1 s only the
+# accelerator hosts are feasible — the LM stream is accel-bound by SLA.
+LM_SLA_MS = {"llama3.2-3b-decode": 1000.0}
+
+
+def _lm_decode_profile(name: str) -> ModelProfile:
+    import dataclasses
+
+    from repro.configs import llama3_2_3b
+    from repro.core.workload import profile_lm_decode
+
+    cfg = {"llama3.2-3b-decode": llama3_2_3b.FULL}[name]
+    # the profile carries the serving-workload name, not the arch id, so
+    # efficiency-table rows and profile-cache keys line up with the
+    # scenario's workload list
+    cfg = dataclasses.replace(cfg, name=name)
+    return profile_lm_decode(cfg, LM_CONTEXT, LM_SLA_MS[name])
+
+
+# Every workload the serving stack can schedule: the six paper models plus
+# the LM-decode streams.  Scenario validation accepts exactly these names.
+SERVING_MODELS = dict(PAPER_MODELS)
+SERVING_MODELS["llama3.2-3b-decode"] = _lm_decode_profile
+
 
 def paper_profile(name: str, prod: bool = True) -> ModelProfile:
+    if name in LM_SLA_MS:
+        return _lm_decode_profile(name)
     cfg = PAPER_MODELS[name](prod)
     return profile_recsys(cfg, SLA_MS[name])

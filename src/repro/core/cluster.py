@@ -213,10 +213,28 @@ class StatefulStep:
     resolved: bool                 # False = hysteresis hold (no re-solve)
     added: np.ndarray              # [H, M] newly activated (loading) servers
     removed: np.ndarray            # [H, M] deactivated (draining) servers
+    # multi-tenant packing (empty when the provisioner has no colocation
+    # table — the defaults keep single-tenant behavior bitwise)
+    coalloc: tuple = ()            # CoMachine shared machines this interval
+    co_added: tuple = ()           # newly activated shared machines
+    co_removed: tuple = ()         # draining shared machines
 
     @property
     def churn(self) -> int:
-        return int(self.added.sum() + self.removed.sum())
+        return int(self.added.sum() + self.removed.sum()) + \
+            len(self.co_added) + len(self.co_removed)
+
+
+def _co_diff(new: tuple, old: tuple) -> tuple[tuple, tuple]:
+    """Multiset diff of shared-machine tuples: (added, removed)."""
+    remaining = list(old)
+    added = []
+    for c in new:
+        if c in remaining:
+            remaining.remove(c)
+        else:
+            added.append(c)
+    return tuple(added), tuple(remaining)
 
 
 class StatefulProvisioner:
@@ -243,16 +261,22 @@ class StatefulProvisioner:
 
     def __init__(self, table: EfficiencyTable, policy: str = "hercules",
                  overprovision: float = 0.05,
-                 transitions: TransitionConfig | None = None, seed: int = 0):
+                 transitions: TransitionConfig | None = None, seed: int = 0,
+                 colocation=None):
         self.table = table
         self.policy = policy
         self.overprovision = overprovision
         self.transitions = transitions or TransitionConfig()
         self.seed = seed
+        # optional repro.core.colocation.ColocationTable: when set, every
+        # re-solve is followed by the interference-aware merge pass and the
+        # step carries shared machines in ``coalloc``
+        self.colocation = colocation
         self.avail = table.avail.astype(np.int64).copy()
         self._rng = np.random.default_rng(seed + 101)
         H, M = table.qps.shape
         self.alloc = np.zeros((H, M), np.int64)
+        self.coalloc: tuple = ()
         self._provisioned_load: np.ndarray | None = None
         self._force = True          # first step / after failure: must solve
         self._warm = True           # day starts warm: no load delay at t=0
@@ -273,18 +297,32 @@ class StatefulProvisioner:
         per failed *serving* instance) and forces a re-solve at the next
         :meth:`step`.
         """
-        victims: list[tuple[int, int]] = []
+        victims: list = []
         for _ in range(count):
             if self.avail[h] <= 0:
                 break
-            serving = int(self.alloc[h].sum())
+            co_h = [c for c in self.coalloc
+                    if c.server == self.table.servers[h]]
+            serving = int(self.alloc[h].sum()) + len(co_h)
             hit_serving = self._rng.random() < serving / self.avail[h]
             self.avail[h] -= 1
             if (hit_serving or serving > self.avail[h]) and serving > 0:
-                m = int(self._rng.choice(
-                    len(self.alloc[h]), p=self.alloc[h] / serving))
-                self.alloc[h, m] -= 1
-                victims.append((h, m))
+                if co_h:
+                    # shared machines are victimized first (deterministic;
+                    # a no-op when coalloc is empty, which keeps the
+                    # single-tenant victim stream bitwise unchanged); one
+                    # failed shared machine yields a victim for every
+                    # tenant packed on it, so the entry is the CoMachine
+                    c = co_h[0]
+                    i = next(j for j, x in enumerate(self.coalloc)
+                             if x is c)
+                    self.coalloc = self.coalloc[:i] + self.coalloc[i + 1:]
+                    victims.append(c)
+                else:
+                    m = int(self._rng.choice(
+                        len(self.alloc[h]), p=self.alloc[h] / serving))
+                    self.alloc[h, m] -= 1
+                    victims.append((h, m))
         self._force = True
         return victims
 
@@ -292,6 +330,9 @@ class StatefulProvisioner:
 
     def _covers(self, target: np.ndarray) -> bool:
         served = (self.alloc * self.table.qps).sum(axis=0)
+        for c in self.coalloc:
+            for name, rate in zip(c.tenants, c.rates):
+                served[self.table.workloads.index(name)] += rate
         return bool((served >= target - 1e-9).all())
 
     def _within_band(self, load: np.ndarray) -> bool:
@@ -301,14 +342,23 @@ class StatefulProvisioner:
         return bool((np.abs(load - self._provisioned_load) <=
                      self.transitions.hysteresis * ref).all())
 
-    def _solve(self, load: np.ndarray) -> ProvisionResult:
+    def _solve(self, load: np.ndarray) -> tuple[ProvisionResult, tuple]:
         table = EfficiencyTable(self.table.servers, self.table.workloads,
                                 self.table.qps, self.table.power, self.avail)
         fn = POLICIES[self.policy]
         kwargs: dict = {"overprovision": self.overprovision}
         if self.policy == "nh":
             kwargs["seed"] = self.seed + self.t
-        return fn(table, load, **kwargs)
+        r = fn(table, load, **kwargs)
+        if self.colocation is None or not r.feasible:
+            return r, ()
+        from repro.core.colocation import pack_colocated
+        packed = pack_colocated(table, self.colocation, load, r,
+                                overprovision=self.overprovision)
+        if packed.merges == 0:
+            return r, ()
+        return ProvisionResult(packed.alloc, packed.provisioned_power_w,
+                               packed.capacity, True), packed.co_machines
 
     def step(self, load: np.ndarray, tail_ok: bool = True) -> StatefulStep:
         load = np.asarray(load, dtype=np.float64)
@@ -318,10 +368,10 @@ class StatefulProvisioner:
             self._covers(target)
         if hold:
             self.n_holds += 1
-            alloc_new, feasible = self.alloc, True
+            alloc_new, co_new, feasible = self.alloc, self.coalloc, True
         else:
             boost = 1.0 if tail_ok else 1.0 + cfg.feedback_boost
-            r = self._solve(load * boost)
+            r, co_new = self._solve(load * boost)
             self.n_resolves += 1
             if not tail_ok:
                 self.n_tail_resolves += 1
@@ -329,14 +379,14 @@ class StatefulProvisioner:
                     # the extra headroom is not available on this pool, but
                     # the offered load itself may still be provisionable —
                     # serve that rather than freezing on a stale allocation
-                    r = self._solve(load)
+                    r, co_new = self._solve(load)
             feasible = r.feasible
             if r.feasible:
                 alloc_new = r.alloc
                 self._provisioned_load = load.copy()
             else:
                 # best effort: keep serving on whatever survives
-                alloc_new = self.alloc
+                alloc_new, co_new = self.alloc, self.coalloc
                 if not tail_ok and self._covers(target):
                     # only the boosted target overshot the pool; the real
                     # one is still covered, so the day itself is not lost
@@ -344,17 +394,24 @@ class StatefulProvisioner:
             self._force = False
         added = np.maximum(alloc_new - self.alloc, 0)
         removed = np.maximum(self.alloc - alloc_new, 0)
+        co_added, co_removed = _co_diff(co_new, self.coalloc)
         if self._warm:  # day starts with a warm fleet: no load transient
             added = np.zeros_like(added)
+            co_added = ()
             self._warm = False
+        drain_frac = min(cfg.drain_s / cfg.interval_s, 1.0)
         power = float((alloc_new * self.table.power).sum())
-        power += float((removed * self.table.power).sum()) * \
-            min(cfg.drain_s / cfg.interval_s, 1.0)
+        power += sum(c.power_w for c in co_new)
+        power += float((removed * self.table.power).sum()) * drain_frac
+        power += sum(c.power_w for c in co_removed) * drain_frac
         self.alloc = alloc_new
+        self.coalloc = co_new
         self.t += 1
         return StatefulStep(
-            alloc=alloc_new.copy(), power_w=power, capacity=int(alloc_new.sum()),
+            alloc=alloc_new.copy(), power_w=power,
+            capacity=int(alloc_new.sum()) + len(co_new),
             feasible=feasible, resolved=not hold, added=added, removed=removed,
+            coalloc=co_new, co_added=co_added, co_removed=co_removed,
         )
 
 

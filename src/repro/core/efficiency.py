@@ -61,6 +61,10 @@ class ProfiledPair:
     p95_ms: float
     evals: int
     space_size: int
+    # Multi-tenant interference dilation baked into qps/p95_ms (1.0 = solo;
+    # see perfmodel.colocation_dilation). Solo records omit/keep the default
+    # so every pre-existing cached profile loads unchanged.
+    dilation: float = 1.0
 
 
 def profile_pair(profile: ModelProfile, device: DeviceProfile,
@@ -88,6 +92,104 @@ def profile_pair(profile: ModelProfile, device: DeviceProfile,
         plan=r.placement.plan, m=s.m, d=s.batch, o=s.o, sd_sparse=s.sd_sparse,
         p95_ms=r.p95_ms, evals=r.evals, space_size=r.space_size,
     )
+    if use_cache:
+        profile_cache.store("hercules", profile.name, device.name, key,
+                            dataclasses.asdict(pair))
+    return pair
+
+
+def derated_device(device: DeviceProfile, co_pressures) -> DeviceProfile:
+    """The device as a co-located victim sees it: every shared resource's
+    bandwidth/throughput scaled by ``1 - u`` where ``u`` is the co-resident
+    tenants' aggregate pressure on that resource (capped at
+    ``perfmodel.COLOC_UTIL_CAP``).  Per-core outstanding-miss limits are
+    per-thread properties and are *not* derated — contention lives on the
+    shared bus / engine / link."""
+    from repro.core import perfmodel
+
+    u = {r: min(sum(max(p.get(r, 0.0), 0.0) for p in co_pressures),
+                perfmodel.COLOC_UTIL_CAP)
+         for r in perfmodel.PRESSURE_RESOURCES}
+    mem = device.mem
+    # gather bandwidth is modeled as bw_gbs * gather_eff, so the gather
+    # derate is applied on top of (divided by) the stream derate
+    mem2 = dataclasses.replace(
+        mem, bw_gbs=mem.bw_gbs * (1.0 - u["stream"]),
+        gather_eff=mem.gather_eff * (1.0 - u["gather"])
+        / max(1.0 - u["stream"], 1e-9))
+    acc2 = device.accel
+    if acc2 is not None:
+        # MPS-style slot time-sharing slows kernels and HBM alike; the host
+        # link is a separately contended resource
+        acc2 = dataclasses.replace(
+            acc2, peak_gflops=acc2.peak_gflops * (1.0 - u["engine"]),
+            hbm_gbs=acc2.hbm_gbs * (1.0 - u["engine"]),
+            link_gbs=acc2.link_gbs * (1.0 - u["link"]))
+    return dataclasses.replace(device, mem=mem2, accel=acc2)
+
+
+def profile_colocated(profile: ModelProfile, device: DeviceProfile,
+                      co_profiles: tuple[ModelProfile, ...],
+                      query_sizes: np.ndarray | None = None, seed: int = 0,
+                      engine: str = "fast", use_cache: bool = True,
+                      o_grid: tuple[int, ...] | None = None,
+                      qps_tol: float = TABLE_QPS_TOL) -> ProfiledPair:
+    """Profile `profile` on `device` with `co_profiles` co-resident.
+
+    Each co-tenant's pressure on the shared resources is measured at its
+    *fair-share* operating point (its solo peak QPS divided by the number
+    of tenants sharing the machine,
+    :func:`repro.core.perfmodel.tenant_pressure`); the victim is then
+    re-searched on the contention-derated device (:func:`derated_device`),
+    so the co-located record is a real latency-bounded operating point —
+    its ``p95_ms`` meets the victim's SLA whenever the search is feasible,
+    and ``qps == 0`` marks an inadmissible packing.  ``dilation`` is the
+    resulting duration inflation ``solo_qps / coloc_qps`` (clamped >= 1 so
+    adding a tenant never shortens durations).  Cached under a coloc-keyed
+    entry (solo cache entries are untouched); an empty co-set returns the
+    solo record bit-identically.
+    """
+    from repro.core import perfmodel
+    from repro.core.gradient_search import gradient_search
+
+    qs = query_sizes if query_sizes is not None else default_query_sizes()
+    base = profile_pair(profile, device, qs, seed=seed, engine=engine,
+                        use_cache=use_cache, o_grid=o_grid, qps_tol=qps_tol)
+    if not co_profiles:
+        return base
+    co_fps = tuple(
+        profile_cache._fingerprint((co.name, co.ops, co.table_gb,
+                                    co.weight_gb, co.sla_ms, co.zipf_alpha))
+        for co in co_profiles)
+    key = None
+    if use_cache:
+        key = profile_cache.pair_key(
+            "hercules", profile, device, qs, seed=seed, o_grid=o_grid,
+            batch_grid=BATCH_GRID, qps_tol=qps_tol, engine=engine,
+            coloc=co_fps)
+        rec = profile_cache.load("hercules", profile.name, device.name, key)
+        if rec is not None:
+            return ProfiledPair(**rec)
+    mean_items = float(np.mean(qs))
+    share = 1.0 / (len(co_profiles) + 1)
+    pressures = []
+    for co in co_profiles:
+        co_base = profile_pair(co, device, qs, seed=seed, engine=engine,
+                               use_cache=use_cache, o_grid=o_grid,
+                               qps_tol=qps_tol)
+        pressures.append(perfmodel.tenant_pressure(
+            co, device, co_base.qps * share, mean_items))
+    r = gradient_search(profile, derated_device(device, pressures), qs,
+                        seed=seed, o_grid=o_grid, engine=engine,
+                        qps_tol=qps_tol)
+    qps_c = min(r.qps, base.qps)
+    dil = base.qps / qps_c if qps_c > 0.0 else float("inf")
+    s = r.sched
+    pair = dataclasses.replace(
+        base, qps=qps_c, p95_ms=r.p95_ms, avg_power_w=r.power_w,
+        plan=r.placement.plan, m=s.m, d=s.batch, o=s.o,
+        sd_sparse=s.sd_sparse, evals=r.evals, space_size=r.space_size,
+        dilation=dil)
     if use_cache:
         profile_cache.store("hercules", profile.name, device.name, key,
                             dataclasses.asdict(pair))

@@ -133,6 +133,94 @@ def accel_link_time(host_bytes_per_item: float, batch: int, device: DeviceProfil
     return host_bytes_per_item * batch / (acc.link_gbs * 1e9) + 10e-6  # DMA setup
 
 
+# -- multi-tenant interference (Hera direction, ROADMAP item 2) --------------
+#
+# Co-located tenants share the server's bottleneck resources: stream and
+# gather memory bandwidth on CPU hosts, the engine and the host link on
+# accelerator hosts.  The contention model is deliberately *measured at the
+# solo operating point*: each tenant's pressure on a resource is the fraction
+# of that resource its solo profile consumes at its solo peak QPS, and a
+# victim's duration tables dilate by a queueing-shaped penalty
+# ``1 + sens_r * alpha_r * u / (1 - u)`` summed over resources — exact 1.0
+# for an empty co-set, monotone non-decreasing in every pressure component.
+
+PRESSURE_RESOURCES = ("stream", "gather", "engine", "link")
+
+# Per-resource contention coefficients (alpha_r): how strongly a unit of
+# co-tenant utilization on the resource inflates a fully-sensitive victim.
+COLOC_ALPHA = {
+    "stream": 0.9,   # shared DDR stream bandwidth (CPU hosts)
+    "gather": 0.7,   # random-gather bandwidth (SLS contention)
+    "engine": 0.6,   # accel co-location slots (MPS-style time sharing)
+    "link": 0.5,     # host<->device link (PCIe DMA contention)
+}
+# Cap on the aggregate co-tenant utilization entering the 1/(1-u) law — a
+# saturated co-tenant dilates a lot, not infinitely.
+COLOC_UTIL_CAP = 0.85
+
+
+def _resource_seconds(profile: ModelProfile, device: DeviceProfile) -> dict:
+    """Seconds per item each shared resource spends on `profile`'s totals."""
+    t = profile.totals()
+    mem = device.mem
+    out = {
+        "stream": t["stream_bytes"] / (mem.bw_gbs * 1e9),
+        "gather": t["gather_bytes"] / (
+            mem.bw_gbs * 1e9 * mem.gather_eff * mem.nmp_factor),
+        "engine": 0.0,
+        "link": 0.0,
+    }
+    acc = device.accel
+    if acc is not None:
+        out["engine"] = t["flops"] / (acc.peak_gflops * 1e9)
+        out["link"] = t["host_bytes"] / (acc.link_gbs * 1e9)
+    return out
+
+
+def tenant_pressure(profile: ModelProfile, device: DeviceProfile,
+                    qps: float, mean_query_items: float) -> dict:
+    """Shared-resource utilization fractions a tenant exerts on `device`
+    at an operating point of ``qps`` queries/s (``mean_query_items`` items
+    per query, paper Fig. 2b sample mean).  Values are >= 0 and not capped
+    here — :func:`colocation_dilation` applies ``COLOC_UTIL_CAP``."""
+    items_s = max(qps, 0.0) * max(mean_query_items, 0.0)
+    sec = _resource_seconds(profile, device)
+    return {r: sec[r] * items_s for r in PRESSURE_RESOURCES}
+
+
+def resource_sensitivity(profile: ModelProfile, device: DeviceProfile) -> dict:
+    """Victim-side sensitivity shares: the fraction of `profile`'s
+    resource-seconds bound to each shared resource on `device` (sparse
+    models weight gather, dense models weight stream/engine).  Sums to 1
+    for a non-empty profile."""
+    sec = _resource_seconds(profile, device)
+    total = sum(sec.values())
+    if total <= 0.0:
+        return {r: 0.0 for r in PRESSURE_RESOURCES}
+    return {r: sec[r] / total for r in PRESSURE_RESOURCES}
+
+
+def colocation_dilation(profile: ModelProfile, device: DeviceProfile,
+                        co_pressures: Sequence[dict]) -> float:
+    """Multiplicative duration dilation (>= 1.0) that the co-resident
+    tenants' aggregate pressure imposes on `profile` when sharing `device`.
+
+    Exactly 1.0 for an empty co-set (single-tenant packings reproduce the
+    solo tables bitwise); monotone non-decreasing in every pressure
+    component (adding a tenant never shortens durations)."""
+    pressures = list(co_pressures)
+    if not pressures:
+        return 1.0
+    sens = resource_sensitivity(profile, device)
+    d = 1.0
+    for r in PRESSURE_RESOURCES:
+        u = sum(max(p.get(r, 0.0), 0.0) for p in pressures)
+        u = min(u, COLOC_UTIL_CAP)
+        if u > 0.0:
+            d += COLOC_ALPHA[r] * sens[r] * u / (1.0 - u)
+    return d
+
+
 @dataclasses.dataclass(frozen=True)
 class PowerModel:
     """Average power from component utilizations (paper: RAPL + nvidia-smi)."""

@@ -51,6 +51,7 @@ def pair_key(
     power_budget_w: float | None = None,
     qps_tol: float = 0.0,
     engine: str = "fast",
+    coloc: tuple | None = None,
 ) -> str:
     """Deterministic key for one profiled (workload, server) cell."""
     h = hashlib.sha1()
@@ -70,6 +71,8 @@ def pair_key(
         payload["qps_tol"] = float(qps_tol)
     if engine != "fast":  # reference-engine records must never satisfy a
         payload["engine"] = engine  # fast lookup or vice versa
+    if coloc:  # co-located records key on the co-tenant set; solo (coloc
+        payload["coloc"] = list(coloc)  # empty/None) keys stay unchanged
 
     h.update(json.dumps(payload, sort_keys=True).encode())
     h.update(np.ascontiguousarray(np.asarray(query_sizes, np.int64)).tobytes())

@@ -118,6 +118,12 @@ class DayInputs:
     failures: list[tuple[int, int, float]] | None = None
     query_sizes: np.ndarray | None = None
     seed: int = 0
+    # optional repro.core.colocation.ColocationTable: when set, the
+    # provisioner may pack complementary tenants onto shared machines and
+    # the runtime serves their per-tenant streams on one machine identity
+    # with interference-dilated duration tables.  None (the default) keeps
+    # the single-tenant day bitwise unchanged.
+    colocation: object | None = None
 
 
 @dataclasses.dataclass
@@ -149,6 +155,10 @@ class DayResult:
     # raw per-(workload, interval) latency seconds; populated only under
     # RuntimeConfig(collect_latencies=True) and excluded from to_dict()
     latencies: list[list[np.ndarray | None]] | None = None
+    # [T] shared (co-located) machines per interval; populated only when
+    # the day ran with a colocation table and excluded from to_dict() so
+    # pinned single-tenant baselines keep their exact key set
+    co_capacity: np.ndarray | None = None
 
     def to_dict(self) -> dict:
         return {
@@ -226,11 +236,17 @@ class PairService:
     """
 
     def __init__(self, profile: ModelProfile, device: DeviceProfile,
-                 record: dict, cache: SimCache):
+                 record: dict, cache: SimCache, dilation: float = 1.0):
         self.profile = profile
         self.device = device
         self.cache = cache
+        # interference dilation of a co-located tenant (>= 1): every pool
+        # duration multiplies by it and the sustainable rate divides by it.
+        # At exactly 1.0 no multiply runs, keeping the solo path bitwise.
+        self.dilation = float(dilation)
         self.qps = float(record["qps"])
+        if self.dilation != 1.0:
+            self.qps = self.qps / self.dilation
         self.sched = SchedConfig(
             batch=int(record["d"]), m=int(record["m"]), o=int(record["o"]),
             sd_sparse=int(record["sd_sparse"]),
@@ -249,11 +265,16 @@ class PairService:
         self.k = max(s.m, 1)
         if self.plan == "cpu_model":
             self.dur = t.cpu_durations(pl.host_ops, s.o, s.m, d, device)
+            if self.dilation != 1.0:
+                self.dur = self.dur * self.dilation
         elif self.plan == "cpu_sd":
             self.k_sparse = max(s.sd_sparse, 1)
             self.dur_sparse = t.cpu_durations(
                 pl.host_sparse, s.o, self.k_sparse, d, device)
             self.dur_dense = t.cpu_durations(pl.host_dense, 1, s.m, d, device)
+            if self.dilation != 1.0:
+                self.dur_sparse = self.dur_sparse * self.dilation
+                self.dur_dense = self.dur_dense * self.dilation
         else:
             self.host_threads = max(device.cpu.cores // max(s.o, 1), 1)
 
@@ -289,6 +310,8 @@ class PairService:
                 ("cpu_stage", pl.host_ops, o, self.host_threads, dev.name),
                 lambda b: cpu_stage_time(pl.host_ops, b, o, dev,
                                          self.host_threads), uniq_t)[inv_t]
+            if self.dilation != 1.0:
+                th = th * self.dilation
             if state is None:
                 ready = fifo_finish(ready, th, self.host_threads)
             else:
@@ -301,6 +324,9 @@ class PairService:
             ("accel_link", pl.link_bytes_per_item, dev.name),
             lambda b: accel_link_time(pl.link_bytes_per_item, b, dev),
             uniq_t)[inv_t]
+        if self.dilation != 1.0:
+            te = te * self.dilation
+            tl = tl * self.dilation
         if state is None:
             e_end = _accel_pipeline(ready, tl, te, s.m)
         else:
@@ -402,6 +428,9 @@ class PairService:
                 ("accel_link", pl.link_bytes_per_item, dev.name),
                 lambda b: accel_link_time(pl.link_bytes_per_item, b, dev),
                 uniq)
+            if self.dilation != 1.0:
+                te = te * self.dilation
+                tl = tl * self.dilation
             per_sub = (te + tl)[inv_s]
             out[nz] = np.add.reduceat(per_sub, cuts)
             if pl.host_ops:
@@ -411,6 +440,8 @@ class PairService:
                     lambda b: cpu_stage_time(pl.host_ops, b,
                                              max(self.sched.o, 1), dev,
                                              self.host_threads), uniq)[inv_s]
+                if self.dilation != 1.0:
+                    th = th * self.dilation
                 out[nz] += wave(th, self.host_threads)
         return out
 
@@ -628,8 +659,23 @@ def simulate_cluster_day(
                 rec, cache)
         return services[key]
 
+    # shared-machine services: the tenant's solo record with its duration
+    # tables dilated by the co-resident set's interference factor, keyed
+    # separately so solo services stay untouched
+    co_services: dict[tuple, PairService] = {}
+
+    def co_service(m: int, c) -> PairService:
+        name = table.workloads[m]
+        f = c.dilation_of(name)
+        key = (c.server, c.tenants, m, f)
+        if key not in co_services:
+            rec = records[f"{name}|{c.server}"]
+            co_services[key] = PairService(
+                profiles[name], servers[c.server], rec, cache, dilation=f)
+        return co_services[key]
+
     prov = StatefulProvisioner(table, policy, overprovision, transitions,
-                               seed=seed)
+                               seed=seed, colocation=inputs.colocation)
     routers = [QueryRouter([], hedge_quantile=cfg.hedge_quantile,
                            hedge_factor=cfg.hedge_factor, seed=seed + m)
                for m in range(M)]
@@ -640,6 +686,7 @@ def simulate_cluster_day(
     power = np.zeros(T)
     capacity = np.zeros(T, np.int64)
     churn = np.zeros(T, np.int64)
+    co_cap = np.zeros(T, np.int64)
     events: list[str] = []
     feasible = True
     # per-(workload, interval) latency arrays (None = not measured) and the
@@ -662,8 +709,10 @@ def simulate_cluster_day(
             feasible = False
             events.append(f"t={t}: {policy} infeasible on surviving pool")
         t0 = t * transitions.interval_s
-        # map this interval's failures onto serving (h, m) victims
-        victims_by_m: dict[int, list[tuple[int, float]]] = {}
+        co_cap[t] = len(step.coalloc)
+        # map this interval's failures onto serving victims: solo (h, m)
+        # cells, or a shared CoMachine whose loss hits every tenant
+        victims_by_m: dict[int, list[tuple]] = {}
         for (fh, frac) in fail_by_t.get(t, []):
             before = int(prov.avail[fh])
             cells = prov.fail(fh)
@@ -672,18 +721,31 @@ def simulate_cluster_day(
                     events.append(
                         f"t={t}: spare {table.servers[fh]} failed")
                 continue
-            for (h, m) in cells:
-                victims_by_m.setdefault(m, []).append((h, frac))
-                events.append(
-                    f"t={t}: serving {table.servers[h]} failed "
-                    f"({table.workloads[m]}) -> re-route + re-provision")
+            for v in cells:
+                if isinstance(v, tuple):
+                    h, m = v
+                    victims_by_m.setdefault(m, []).append((h, frac))
+                    events.append(
+                        f"t={t}: serving {table.servers[h]} failed "
+                        f"({table.workloads[m]}) -> re-route + re-provision")
+                else:  # shared machine: every tenant pool loses its view
+                    g = ("c", v.server, v.tenants)
+                    for name in v.tenants:
+                        victims_by_m.setdefault(
+                            table.workloads.index(name), []).append((g, frac))
+                    events.append(
+                        f"t={t}: shared {v.server} failed "
+                        f"({'+'.join(v.tenants)}) -> re-route + re-provision")
 
         for m in range(M):
             rate = float(traces[m, t])
             if rate <= 0.0:
                 slot_states[m] = {}  # a whole idle interval drains the pool
                 continue
-            if step.alloc[:, m].sum() == 0:
+            if step.alloc[:, m].sum() == 0 and not any(
+                    table.workloads[m] in c.tenants
+                    and c.rate_of(table.workloads[m]) > 0.0
+                    for c in step.coalloc):
                 feasible = False
                 slot_states[m] = {}
                 events.append(f"t={t}: {table.workloads[m]} unallocated")
@@ -737,19 +799,92 @@ def simulate_cluster_day(
                     states.append(_state_abs(
                         res if res is not None else svc.fresh_state(), t0))
                     keys.append(None)
+            # shared (co-located) machines: one slot per tenant pool per
+            # machine, weighted by the tenant's assigned rate and carrying
+            # a composite ("c", server, tenants, i) machine identity so a
+            # hardware failure correlates across every tenant it serves
+            name_m = table.workloads[m]
+            co_cur: dict[tuple, list] = {}
+            for c in step.coalloc:
+                if name_m in c.tenants:
+                    co_cur.setdefault(("c", c.server, c.tenants),
+                                      []).append(c)
+            co_rem: dict[tuple, list] = {}
+            for c in step.co_removed:
+                if name_m in c.tenants:
+                    co_rem.setdefault(("c", c.server, c.tenants),
+                                      []).append(c)
+            co_add: dict[tuple, list] = {}
+            for c in step.co_added:
+                if name_m in c.tenants:
+                    co_add.setdefault(("c", c.server, c.tenants),
+                                      []).append(c)
+            for g in sorted(set(co_cur) | set(co_rem)):
+                cur = co_cur.get(g, [])
+                # kept machines first: they map onto carried (g, i) states,
+                # newly added ones load their model before serving
+                pend = list(co_add.get(g, []))
+                kept_c, fresh_c = [], []
+                for c in cur:
+                    if c in pend:
+                        pend.remove(c)
+                        fresh_c.append(c)
+                    else:
+                        kept_c.append(c)
+                cur = kept_c + fresh_c
+                keep = len(kept_c)
+                for i, c in enumerate(cur):
+                    rate_c = c.rate_of(name_m)
+                    if rate_c <= 0.0:
+                        continue
+                    svc = co_service(m, c)
+                    ready = t0 + transitions.model_load_s \
+                        if i >= keep else t0
+                    slots.append(ServerSlot(c.server, rate_c,
+                                            ready_at=ready,
+                                            machine=g + (i,)))
+                    pair_of.append(svc)
+                    res = prev_states.get((g, i)) if i < keep else None
+                    states.append(_state_abs(
+                        res if res is not None else svc.fresh_state(), t0))
+                    keys.append((g, i))
+                for j, c in enumerate(co_rem.get(g, [])):
+                    rate_c = c.rate_of(name_m)
+                    if rate_c <= 0.0:
+                        continue
+                    svc = co_service(m, c)
+                    slots.append(ServerSlot(
+                        c.server, rate_c, ready_at=t0,
+                        retire_at=t0 + transitions.drain_s,
+                        machine=g + (len(cur) + j,)))
+                    pair_of.append(svc)
+                    res = prev_states.get((g, keep + j))
+                    states.append(_state_abs(
+                        res if res is not None else svc.fresh_state(), t0))
+                    keys.append(None)
             router = routers[m]
             router.refresh(slots)
             thr = router.hedge_threshold()
             carry_in = [_state_copy(st) for st in states] \
                 if cfg.hedge_live_queue and np.isfinite(thr) else None
 
-            # mid-window failures: victim stops taking queries at t_f
+            # mid-window failures: victim stops taking queries at t_f.
+            # A tuple key is a shared machine's identity — every tenant
+            # pool retires the same machine index; an int key is a solo
+            # server type (shared slots are excluded from its match)
             fail_times: list[tuple[int, float]] = []
             for (h, frac) in victims_by_m.get(m, []):
                 t_f = float(arrivals[0] + frac * span)
-                vi = next((i for i, s in enumerate(slots)
-                           if s.server_type == table.servers[h]
-                           and s.accepts(t_f)), None)
+                if isinstance(h, tuple):
+                    vi = next((i for i, s in enumerate(slots)
+                               if s.machine is not None
+                               and s.machine[:3] == h
+                               and s.accepts(t_f)), None)
+                else:
+                    vi = next((i for i, s in enumerate(slots)
+                               if s.machine is None
+                               and s.server_type == table.servers[h]
+                               and s.accepts(t_f)), None)
                 if vi is None:
                     continue
                 slots[vi].retire_at = t_f
@@ -999,4 +1134,5 @@ def simulate_cluster_day(
         all_meet_sla=bool(all_meet),
         events=events,
         latencies=lat_mt if cfg.collect_latencies else None,
+        co_capacity=co_cap if inputs.colocation is not None else None,
     )

@@ -73,6 +73,11 @@ class ServerSlot:
     inflight: int = 0
     ready_at: float = 0.0          # model load completes (serving starts)
     retire_at: float = float("inf")  # drain deadline (stops taking queries)
+    # physical machine identity.  None = a machine this tenant owns alone;
+    # a shared (co-located) machine appears as one slot per tenant pool,
+    # all carrying the same identity prefix, so a hardware failure can be
+    # attributed to every tenant it serves (``mark_machine_failed``).
+    machine: tuple | None = None
 
     def accepts(self, t: float) -> bool:
         return self.healthy and self.ready_at <= t < self.retire_at
@@ -110,6 +115,35 @@ class QueryRouter:
 
     def mark_failed(self, slot: ServerSlot):
         slot.healthy = False
+
+    def mark_machine_failed(self, machine: tuple) -> list[ServerSlot]:
+        """Fail every slot whose identity starts with ``machine`` — the
+        per-tenant views of one shared physical machine go down together.
+        Returns the slots marked (for the caller's re-dispatch pass)."""
+        hit = [s for s in self.slots if s.machine is not None
+               and s.machine[:len(machine)] == machine]
+        for s in hit:
+            s.healthy = False
+        return hit
+
+    def sla_attribution(self, assigned: np.ndarray, latency: np.ndarray,
+                        sla_s: float) -> dict[tuple | None, dict]:
+        """Per-machine SLA attribution of one served stream: for every
+        machine identity in the pool (``None`` groups all tenant-exclusive
+        slots), the queries it served and how many met ``sla_s``.  Lets a
+        co-located day answer "which shared machine hurt which tenant"
+        without re-simulating."""
+        assigned = np.asarray(assigned, np.int64)
+        latency = np.asarray(latency, np.float64)
+        out: dict[tuple | None, dict] = {}
+        for i, s in enumerate(self.slots):
+            sel = latency[assigned == i]
+            if len(sel) == 0:
+                continue
+            g = out.setdefault(s.machine, {"n_queries": 0, "n_met": 0})
+            g["n_queries"] += int(len(sel))
+            g["n_met"] += int((sel <= sla_s).sum())
+        return out
 
     def assign_stream(self, arrivals: np.ndarray) -> np.ndarray:
         """Assign each arrival to a slot; returns slot indices.

@@ -48,7 +48,8 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.configs.paper_models import PAPER_MODELS, paper_profile
+from repro.configs.paper_models import (PAPER_MODELS, SERVING_MODELS,
+                                        paper_profile)
 from repro.core.cluster import POLICIES, EfficiencyTable, TransitionConfig
 from repro.core.devices import SERVER_TYPES
 from repro.serving.cluster_runtime import (
@@ -141,10 +142,10 @@ class WorkloadSpec:
         where = f"workload {self.name!r}" if isinstance(self.name, str) \
             else "workload"
         _coerce(where, "name", self.name, str)
-        if self.name not in PAPER_MODELS:
+        if self.name not in SERVING_MODELS:
             raise ScenarioError(
                 f"{where}: unknown workload; known workloads: "
-                f"{', '.join(sorted(PAPER_MODELS))}")
+                f"{', '.join(sorted(SERVING_MODELS))}")
         for f in dataclasses.fields(self):
             if f.name == "name":
                 continue
@@ -626,6 +627,9 @@ class ScenarioSpec:
     # copies of the workload curves, joined by capacity/RTT links
     regions: tuple[RegionSpec, ...] | None = None
     links: tuple[LinkSpec, ...] | None = None
+    # interference-aware multi-tenant packing (repro.core.colocation): the
+    # provisioner may merge complementary tenants onto shared machines
+    colocation: bool = False
 
     def __post_init__(self):
         _coerce("scenario", "name", self.name, str)
@@ -680,6 +684,12 @@ class ScenarioSpec:
             raise ScenarioError(
                 f"{where}: unknown policy {self.policy!r}; known: "
                 f"{', '.join(POLICIES)}")
+        object.__setattr__(self, "colocation",
+                           _coerce(where, "colocation", self.colocation,
+                                   bool))
+        if self.colocation and self.regions is not None:
+            raise ScenarioError(f"{where}: colocation is not supported for "
+                                "geo (multi-region) scenarios yet")
         if self.regions is not None:
             reg = tuple(self.regions)
             object.__setattr__(self, "regions", reg)
@@ -772,6 +782,7 @@ class ScenarioSpec:
             else [r.to_dict() for r in self.regions],
             "links": None if self.links is None
             else [li.to_dict() for li in self.links],
+            "colocation": self.colocation,
         }
 
     @staticmethod
@@ -844,6 +855,22 @@ def _bundle(spec: ScenarioSpec, verbose: bool = False):
     return _BUNDLES[key]
 
 
+# colocation tables, memoized like _BUNDLES (the admissible cells depend
+# only on the workload set and the server pool, not on availability)
+_COLOC_TABLES: dict[tuple, Any] = {}
+
+
+def _coloc_table(spec: ScenarioSpec, profiles: dict, servers: dict | None):
+    from repro.core.colocation import build_colocation_table
+
+    key = (tuple(sorted(spec.workload_names())),
+           None if spec.servers is None else tuple(sorted(spec.servers)))
+    if key not in _COLOC_TABLES:
+        _COLOC_TABLES[key] = build_colocation_table(
+            profiles, servers if servers is not None else dict(SERVER_TYPES))
+    return _COLOC_TABLES[key]
+
+
 @dataclasses.dataclass
 class CompiledScenario:
     """A spec resolved to a :class:`DayInputs` bundle plus runtime config.
@@ -911,6 +938,8 @@ def compile_scenario(spec: ScenarioSpec, verbose: bool = False):
 
         return compile_geo_scenario(spec, verbose=verbose)
     table, records, profiles, servers = _bundle(spec, verbose=verbose)
+    coloc = _coloc_table(spec, profiles, servers) if spec.colocation \
+        else None
     cap = table.fleet_capacity()
     traces = np.stack([
         diurnal_trace(w.load_frac * cap[m], n_steps=spec.n_steps,
@@ -927,7 +956,7 @@ def compile_scenario(spec: ScenarioSpec, verbose: bool = False):
             table=table, records=records, profiles=profiles, traces=traces,
             servers=servers, overprovision=float(over),
             transitions=TransitionConfig(**spec.transitions),
-            failures=[], seed=spec.seed),
+            failures=[], seed=spec.seed, colocation=coloc),
         config=RuntimeConfig())
     runtime = dict(spec.runtime)
     for ev in spec.events:
@@ -1135,3 +1164,51 @@ register(_smoke_spec(
     workloads=GEO_WORKLOADS, regions=GEO_REGIONS, links=GEO_LINKS,
     events=(Event.create("region_drain", region="ap-south",
                          at=10, ramp=2),)))
+
+register(_smoke_spec(
+    "geo_hetero_pools",
+    "geo_3region over heterogeneous per-region fleets: us-east keeps the "
+    "full smoke pool, eu-west is a CPU-only site (no T7 accelerators), "
+    "ap-south is an accelerator-dense edge site — spill decisions must "
+    "respect each region's own efficiency table",
+    workloads=GEO_WORKLOADS,
+    regions=(
+        RegionSpec("us-east", phase_hours=0.0),
+        RegionSpec("eu-west", phase_hours=-7.0, trace_seed_offset=100,
+                   servers=("T2", "T3"),
+                   availability={"T2": 70, "T3": 25}),
+        RegionSpec("ap-south", phase_hours=7.0, trace_seed_offset=200,
+                   servers=("T3", "T7"),
+                   availability={"T3": 15, "T7": 12}),
+    ),
+    links=GEO_LINKS))
+
+# The co-location pair: a merge fires when two tenants' integer-rounding
+# slack fits one shared machine, so these days run at fractions where the
+# peak interval is merge-feasible (pinned by the bench's colo_day record:
+# co-located Hercules beats single-tenant Hercules on peak provisioned
+# power with every tenant meeting its SLA in every interval).
+
+register(_smoke_spec(
+    "colo_complements",
+    "sparse-heavy + dense-heavy complements share machines: the "
+    "interference-aware packer merges a gather-bound RMC1 machine with a "
+    "compute-bound RMC3 machine wherever both tenants' dilated residual "
+    "loads fit one server inside their SLAs",
+    workloads=(
+        WorkloadSpec(SMOKE_WORKLOADS[0], load_frac=0.07, trace_seed=0),
+        WorkloadSpec(SMOKE_WORKLOADS[1], load_frac=0.07, trace_seed=1),
+    ),
+    colocation=True))
+
+register(_smoke_spec(
+    "colo_recsys_lm",
+    "recommendation + LM-decode sharing accelerator hosts: the "
+    "per-generation LM SLA is accel-only feasible, so every merge packs "
+    "the token stream beside RMC1 on a T7 (engine/HBM slot sharing, "
+    "measured-interference dilation)",
+    workloads=(
+        WorkloadSpec(SMOKE_WORKLOADS[0], load_frac=0.05, trace_seed=0),
+        WorkloadSpec("llama3.2-3b-decode", load_frac=0.05, trace_seed=1),
+    ),
+    colocation=True))

@@ -71,6 +71,7 @@ def hermetic_profiles():
     tmp = pathlib.Path(tempfile.mkdtemp())
     mp.setattr(profile_cache, "PROFILE_DIR", tmp)
     mp.setattr(sc, "_BUNDLES", {})
+    mp.setattr(sc, "_COLOC_TABLES", {})
     yield
     mp.undo()
 

@@ -59,10 +59,13 @@ MIN_EVENT_FLEET_SPEEDUP = 2.0
 # and with it from the scenario-matrix test suite — fails the gate.
 EXPECTED_SCENARIOS = (
     "baseline_day",
+    "colo_complements",
+    "colo_recsys_lm",
     "failure_day",
     "flash_crowd",
     "geo_3region",
     "geo_drain",
+    "geo_hetero_pools",
     "geo_partition",
     "hedge_storm",
     "model_push_midpeak",
@@ -75,6 +78,13 @@ EXPECTED_SCENARIOS = (
 # smoke-sized serving runs; it catches order-of-magnitude regressions.
 MIN_GEO_POWER_WIN = 0.0
 MAX_GEO_WALL_S = 300.0
+# Co-location day gates: interference-aware multi-tenant packing must
+# beat the single-tenant Hercules packing of the same inputs on peak
+# provisioned power, by actually provisioning shared machines, with every
+# tenant meeting its SLA in every measured interval (the dilated duration
+# tables make an SLA-blind win impossible to fake).
+MIN_COLO_POWER_WIN = 0.0
+MAX_COLO_WALL_S = 300.0
 
 _failures: list[str] = []
 
@@ -143,6 +153,7 @@ def check_cluster_smoke(smoke_path: str, baseline_path: str) -> None:
     check_event_core(got)
     check_scenario_registry(got)
     check_geo(got)
+    check_colo(got)
 
 
 def check_geo(got: dict) -> None:
@@ -173,6 +184,39 @@ def check_geo(got: dict) -> None:
     check(geo["wall_s"] <= MAX_GEO_WALL_S,
           f"geo day within {MAX_GEO_WALL_S:.0f}s wall budget",
           f"took {geo['wall_s']:.1f}s")
+
+
+def check_colo(got: dict) -> None:
+    """Co-location day gates: the recsys+LM co-located day must beat the
+    single-tenant packing of the same compiled inputs on peak provisioned
+    power by actually provisioning shared machines, while every tenant
+    meets its SLA in every measured interval — a win bought by blowing a
+    co-resident tenant's tail cannot pass."""
+    colo = got.get("colo_day")
+    check(colo is not None, "bench emits a colo_day record")
+    if colo is None:
+        return
+    rc, rs = colo["colocated"], colo["single_tenant"]
+    check(rc["feasible"], "colo day feasible")
+    check(rs["feasible"], "single-tenant comparison day feasible")
+    check(rc["all_meet_sla"],
+          "colo day: every tenant meets SLA (day level)")
+    for name, w in rc["per_workload"].items():
+        check(w["interval_sla_met_frac"] == 1.0,
+              f"colo day: {name} meets SLA every measured interval",
+              f"met_frac={w['interval_sla_met_frac']:.3f}")
+    shared = sum(1 for c in colo["co_capacity"] if c > 0)
+    check(shared > 0,
+          "colo day actually provisions shared machines",
+          f"shared-machine intervals={shared}")
+    win = colo["colocated_vs_single_power_peak"]
+    check(win > MIN_COLO_POWER_WIN,
+          "co-located beats single-tenant on peak provisioned power",
+          f"win={win:.3f} ({rc['peak_power_w']:.0f}W vs "
+          f"{rs['peak_power_w']:.0f}W)")
+    check(colo["wall_s"] <= MAX_COLO_WALL_S,
+          f"colo day within {MAX_COLO_WALL_S:.0f}s wall budget",
+          f"took {colo['wall_s']:.1f}s")
 
 
 def check_scenario_registry(got: dict) -> None:
@@ -286,6 +330,7 @@ def check_full_record(full_path: str) -> None:
                   f"{len(s['sla_attainment'])} vs {n_steps} intervals")
     check_event_core(full)
     check_geo(full)
+    check_colo(full)
 
 
 def main() -> int:

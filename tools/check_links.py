@@ -1,11 +1,20 @@
 #!/usr/bin/env python
-"""Relative-link checker for the docs tree (CI gate).
+"""Docs-tree checker for the docs CI gate.
 
 Usage: python tools/check_links.py README.md docs [more files/dirs...]
 
-Scans markdown files for inline links/images ``[text](target)`` and fails
-if a relative target does not resolve on disk (anchors are stripped;
-absolute URLs and mailto/anchor-only links are skipped).
+Three checks, all against the working tree:
+
+- **links**: scans markdown files for inline links/images
+  ``[text](target)`` and fails if a relative target does not resolve on
+  disk (anchors are stripped; absolute URLs and mailto/anchor-only links
+  are skipped).
+- **architecture staleness**: every module under ``src/repro/serving/``
+  and ``src/repro/core/`` must appear (by name) in
+  ``docs/ARCHITECTURE.md``'s module map — a new serving/core module
+  cannot land undocumented.
+- **docs index**: every ``docs/*.md`` file must be linked from the
+  ``docs/README.md`` landing page, so the reading order stays complete.
 """
 from __future__ import annotations
 
@@ -15,6 +24,9 @@ import sys
 
 LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 SKIP = ("http://", "https://", "mailto:", "#")
+
+# Packages whose every module must be named in docs/ARCHITECTURE.md.
+DOCUMENTED_PACKAGES = ("src/repro/serving", "src/repro/core")
 
 
 def md_files(args: list[str]) -> list[pathlib.Path]:
@@ -31,10 +43,10 @@ def md_files(args: list[str]) -> list[pathlib.Path]:
     return out
 
 
-def main(args: list[str]) -> int:
+def check_links(files: list[pathlib.Path]) -> tuple[int, list[str]]:
     bad: list[str] = []
     n_links = 0
-    for f in md_files(args or ["README.md", "docs"]):
+    for f in files:
         for m in LINK.finditer(f.read_text()):
             target = m.group(1)
             if target.startswith(SKIP):
@@ -45,9 +57,54 @@ def main(args: list[str]) -> int:
                 continue
             if not (f.parent / rel).exists():
                 bad.append(f"{f}: broken link -> {target}")
+    return n_links, bad
+
+
+def check_architecture(root: pathlib.Path) -> list[str]:
+    """Every serving/core module must appear in ARCHITECTURE.md's map."""
+    arch = root / "docs" / "ARCHITECTURE.md"
+    if not arch.exists():
+        return [f"{arch}: missing (architecture staleness check)"]
+    text = arch.read_text()
+    bad: list[str] = []
+    for pkg in DOCUMENTED_PACKAGES:
+        for mod in sorted((root / pkg).glob("*.py")):
+            stem = mod.stem
+            if stem == "__init__":
+                continue
+            # match "core/colocation.py" or the bare module name
+            short = f"{pathlib.Path(pkg).name}/{stem}"
+            if short not in text and stem not in text:
+                bad.append(
+                    f"{arch}: stale module map -> {mod.relative_to(root)} "
+                    f"not mentioned")
+    return bad
+
+
+def check_docs_index(root: pathlib.Path) -> list[str]:
+    """Every docs/*.md must be linked from the docs/README.md index."""
+    index = root / "docs" / "README.md"
+    if not index.exists():
+        return [f"{index}: missing (docs index check)"]
+    linked = {m.group(1).split("#", 1)[0]
+              for m in LINK.finditer(index.read_text())}
+    bad: list[str] = []
+    for doc in sorted((root / "docs").glob("*.md")):
+        if doc.name == "README.md":
+            continue
+        if doc.name not in linked:
+            bad.append(f"{index}: docs index missing link -> {doc.name}")
+    return bad
+
+
+def main(args: list[str]) -> int:
+    n_links, bad = check_links(md_files(args or ["README.md", "docs"]))
+    root = pathlib.Path(__file__).resolve().parent.parent
+    bad += check_architecture(root)
+    bad += check_docs_index(root)
     for b in bad:
         print(b)
-    print(f"check_links: {n_links} relative links, {len(bad)} broken")
+    print(f"check_links: {n_links} relative links, {len(bad)} problems")
     return 1 if bad else 0
 
 
